@@ -1,0 +1,67 @@
+"""Fig. 7 reproduction: job satisfaction vs computing-node capacity.
+
+60 UEs at 1 prompt/s; compute capacity scaled in units of one A100
+(Table I workload). The claims: disjoint@20 ms never reaches 95 %;
+disjoint@5 ms needs ~11 A100s; ICC needs ~8 -> 27 % hardware saving.
+Also reports the Fig. 7 bar metric (avg tokens/s per prompt).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core.latency_model import A100, LLAMA2_7B, LatencyModel
+from repro.core.simulator import SCHEMES, SimConfig, simulate
+
+
+def run(
+    out_dir: str = "benchmarks/results",
+    gpu_counts: Optional[Sequence[int]] = None,
+    sim_time: float = 30.0,
+    n_seeds: int = 3,
+) -> dict:
+    gpu_counts = list(gpu_counts or range(2, 17))
+    out = {"gpus": gpu_counts, "schemes": {}}
+    min_gpus = {}
+    for name, scheme in SCHEMES.items():
+        sats, tps = [], []
+        for n in gpu_counts:
+            lm = LatencyModel(A100.scaled(n), LLAMA2_7B, fidelity="paper")
+            svc = lambda job: lm.job_latency(job.n_input, job.n_output)
+            s, t = [], []
+            for seed in range(n_seeds):
+                r = simulate(
+                    scheme,
+                    SimConfig(n_ues=60, sim_time=sim_time, seed=seed * 1000),
+                    svc,
+                )
+                s.append(r.satisfaction)
+                t.append(r.avg_tokens_per_s)
+            sats.append(float(np.mean(s)))
+            tps.append(float(np.nanmean(t)))
+        out["schemes"][name] = {"satisfaction": sats, "tokens_per_s": tps}
+        reach = [n for n, s in zip(gpu_counts, sats) if s >= 0.95]
+        min_gpus[name] = min(reach) if reach else None
+        print(f"[fig7] {name:13s} min GPUs for 95%: {min_gpus[name]} "
+              f"sat={['%.2f' % s for s in sats]}")
+    out["min_gpus"] = min_gpus
+    icc, ran = min_gpus["icc"], min_gpus["disjoint_ran"]
+    if icc and ran:
+        out["cost_saving_vs_disjoint_ran"] = 1.0 - icc / ran
+    out["mec_never_reaches"] = min_gpus["disjoint_mec"] is None
+    out["paper_claim_saving"] = 0.27
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, "fig7_gpu_scaling.json"), "w") as f:
+        json.dump(out, f, indent=1)
+    if icc and ran:
+        print(f"[fig7] ICC {icc} vs disjoint@5ms {ran} GPUs -> "
+              f"{out['cost_saving_vs_disjoint_ran']:.0%} saving (paper: 27%)")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,101 @@
+"""Aggregate dry-run JSONs into the §Roofline markdown table."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Optional
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(results_dir: str = "benchmarks/results/dryrun", mesh: str = "single",
+         tag: Optional[str] = None):
+    recs = []
+    suffix = f"__{mesh}" + (f"__{tag}.json" if tag else ".json")
+    for f in sorted(glob.glob(os.path.join(results_dir, f"*{suffix}"))):
+        if tag is None and "__single__" in os.path.basename(f):
+            continue  # tagged variants excluded from the baseline table
+        if tag is None and "__multi__" in os.path.basename(f):
+            continue
+        recs.append(json.load(open(f)))
+    return recs
+
+
+def table(recs, title: str) -> str:
+    lines = [
+        f"### {title}",
+        "",
+        "| arch | shape | compute s | memory s | collective s | dominant | "
+        "MODEL_FLOPS | useful | mem GB/dev | fits |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    recs = [r for r in recs if r.get("status") == "ok"]
+    recs.sort(key=lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"])))
+    for r in recs:
+        ro, m = r["roofline"], r["memory"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {ro['compute_s']:.3f} | "
+            f"{ro['memory_s']:.3f} | {ro['collective_s']:.3f} | "
+            f"**{ro['dominant']}** | {ro['model_flops']:.2e} | "
+            f"{ro['useful_ratio']:.2f} | {m['peak_est_gb']:.1f} | "
+            f"{'yes' if m['fits_16gb'] else 'NO'} |"
+        )
+    return "\n".join(lines)
+
+
+def perf_table(results_dir: str = "benchmarks/results/dryrun") -> str:
+    """Hillclimb variants (tagged JSONs) next to their baselines."""
+    rows = []
+    for f in sorted(glob.glob(os.path.join(results_dir, "*__single__*.json"))):
+        r = json.load(open(f))
+        if r.get("status") != "ok":
+            continue
+        tag = os.path.basename(f).split("__single__")[1][: -len(".json")]
+        rows.append((r["arch"], r["shape"], tag, r))
+    base = {
+        (r["arch"], r["shape"]): r
+        for r in load(results_dir, mesh="single")
+        if r.get("status") == "ok"
+    }
+    lines = [
+        "### §Perf variants (single pod)",
+        "",
+        "| arch | shape | variant | compute s | memory s | collective s | "
+        "step s (Σ) | mem GB | useful |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+
+    def fmt(r, tag):
+        ro, m = r["roofline"], r["memory"]
+        return (
+            f"| {r['arch']} | {r['shape']} | {tag} | {ro['compute_s']:.3f} | "
+            f"{ro['memory_s']:.3f} | {ro['collective_s']:.3f} | "
+            f"{ro['step_s']:.3f} | {m['peak_est_gb']:.1f} | "
+            f"{ro['useful_ratio']:.2f} |"
+        )
+
+    seen = set()
+    for arch, shape, tag, r in rows:
+        if (arch, shape) not in seen and (arch, shape) in base:
+            lines.append(fmt(base[(arch, shape)], "**baseline**"))
+            seen.add((arch, shape))
+        lines.append(fmt(r, tag))
+    return "\n".join(lines)
+
+
+def run(out_dir: str = "benchmarks/results") -> str:
+    md = table(load(mesh="single"), "Single-pod (16x16 = 256 chips) baselines")
+    md += "\n\n" + perf_table()
+    path = os.path.join(out_dir, "roofline_table.md")
+    with open(path, "w") as f:
+        f.write(md + "\n")
+    ok = sum(1 for r in load(mesh="single") if r.get("status") == "ok")
+    okm = sum(1 for r in load(mesh="multi") if r.get("status") == "ok")
+    print(f"[roofline] single-pod ok={ok}, multi-pod ok={okm}; table -> {path}")
+    return md
+
+
+if __name__ == "__main__":
+    run()

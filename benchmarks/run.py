@@ -1,0 +1,72 @@
+"""Benchmark aggregator: one entry per paper table/figure + framework
+benches. Prints a ``name,value,derived`` CSV summary and writes JSON into
+benchmarks/results/.
+
+Full-fidelity figure sweeps:  python -m benchmarks.fig6_capacity  (etc.)
+This runner uses reduced sweeps to stay fast while still validating every
+claim direction.
+"""
+
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from . import (
+        ablation_scheduler,
+        fig4_queueing,
+        fig6_capacity,
+        fig7_gpu_scaling,
+        kernel_bench,
+        roofline_report,
+    )
+
+    rows = []
+
+    r4 = fig4_queueing.run()
+    rows.append(("fig4.capacity_joint_ran_per_s", r4["capacities"]["joint_ran"],
+                 "queueing closed form"))
+    rows.append(("fig4.gain_vs_mec", r4["gain_joint_ran_vs_disjoint_mec"],
+                 "paper: +0.98"))
+
+    r6 = fig6_capacity.run(rates=range(20, 105, 10), sim_time=15.0, n_seeds=2)
+    rows.append(("fig6.capacity_icc_per_s", r6["schemes"]["icc"]["capacity"],
+                 "paper: 80/s"))
+    rows.append(("fig6.capacity_mec_per_s",
+                 r6["schemes"]["disjoint_mec"]["capacity"], "paper: 50/s"))
+    rows.append(("fig6.gain_icc_vs_mec", r6["gain_icc_vs_mec"], "paper: +0.60"))
+
+    r7 = fig7_gpu_scaling.run(gpu_counts=range(4, 15, 2), sim_time=15.0,
+                              n_seeds=2)
+    rows.append(("fig7.min_gpus_icc", r7["min_gpus"].get("icc"), "paper: 8"))
+    rows.append(("fig7.min_gpus_disjoint_ran", r7["min_gpus"].get("disjoint_ran"),
+                 "paper: 11"))
+    if "cost_saving_vs_disjoint_ran" in r7:
+        rows.append(("fig7.cost_saving", r7["cost_saving_vs_disjoint_ran"],
+                     "paper: 0.27"))
+
+    ra = ablation_scheduler.run(sim_time=15.0)
+    for k, v in ra["satisfaction"].items():
+        rows.append((f"ablation.{k}", v, "sat @ 70/s"))
+
+    for k in kernel_bench.run():
+        rows.append((f"kernel.{k['kernel'].split()[0]}.cpu_ms",
+                     round(k["cpu_ref_ms"], 3),
+                     f"v5e roofline {k['tpu_roofline_us']:.0f}us"))
+
+    roofline_report.run()
+
+    from . import latency_model_validation
+
+    for r in latency_model_validation.run():
+        rows.append((f"eq78.{r['arch']}.ratio", round(r["ratio"], 2),
+                     "hlo_bound / analytic (decode_32k, V3)"))
+
+    print("\nname,value,derived")
+    for name, value, derived in rows:
+        print(f"{name},{value},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Capacity study: how the ICC advantage changes with the latency budget
+and the compute:comm balance — a beyond-paper exploration of the paper's
+Def.-2 metric using the closed-form queueing layer (instant).
+
+Run:  PYTHONPATH=src python examples/capacity_study.py
+"""
+
+import numpy as np
+
+from repro.core.queueing import (
+    ICCSystem,
+    disjoint_satisfaction,
+    joint_satisfaction,
+    service_capacity,
+)
+
+
+def cap_joint(sys, b):
+    return service_capacity(lambda l: joint_satisfaction(sys, l, b),
+                            min(sys.mu1, sys.mu2))
+
+
+def cap_disjoint(sys, b, frac_comm=0.3):
+    return service_capacity(
+        lambda l: disjoint_satisfaction(sys, l, b, frac_comm * b,
+                                        (1 - frac_comm) * b),
+        min(sys.mu1, sys.mu2),
+    )
+
+
+print("=== gain vs latency budget (mu1=900, mu2=100, RAN 5ms vs MEC 20ms) ===")
+print(f"{'budget ms':>10s} {'joint@RAN':>10s} {'disj@MEC':>10s} {'gain':>8s}")
+for b in (0.03, 0.05, 0.08, 0.12, 0.20, 0.40):
+    ran = ICCSystem(900.0, 100.0, 0.005)
+    mec = ICCSystem(900.0, 100.0, 0.020)
+    cj, cd = cap_joint(ran, b), cap_disjoint(mec, b)
+    gain = cj / cd - 1 if cd > 0 else float("inf")
+    print(f"{b*1e3:10.0f} {cj:10.1f} {cd:10.1f} {gain:8.1%}")
+
+print("\n=== gain vs compute speed (fixed budget 80 ms) ===")
+print("(the paper's Fig. 7 observation: integration matters most when")
+print(" compute is the scarce resource)")
+print(f"{'mu2':>8s} {'joint@RAN':>10s} {'disj@MEC':>10s} {'gain':>8s}")
+for mu2 in (50.0, 100.0, 200.0, 400.0, 800.0):
+    ran = ICCSystem(900.0, mu2, 0.005)
+    mec = ICCSystem(900.0, mu2, 0.020)
+    cj, cd = cap_joint(ran, 0.080), cap_disjoint(mec, 0.080)
+    gain = cj / cd - 1 if cd > 0 else float("inf")
+    print(f"{mu2:8.0f} {cj:10.1f} {cd:10.1f} {gain:8.1%}")
+
+print("\n=== optimal disjoint split never beats joint ===")
+ran = ICCSystem(900.0, 100.0, 0.005)
+best = max(
+    (cap_disjoint(ran, 0.080, f), f) for f in np.linspace(0.1, 0.9, 17)
+)
+print(f"best disjoint split: b_comm={best[1]:.0%} -> {best[0]:.1f}/s; "
+      f"joint -> {cap_joint(ran, 0.080):.1f}/s")

@@ -1,0 +1,65 @@
+"""Train a ~35M-param dense LM for a few hundred steps on the synthetic
+stream — the full training substrate (data -> remat'd forward -> AdamW ->
+checkpoint) end to end on CPU.
+
+The synthetic corpus is an order-1 permutation chain with 5% noise, so the
+achievable loss floor is printed alongside; the model should close most of
+the gap from ln(V) toward it.
+
+Run:  PYTHONPATH=src python examples/train_small.py [--steps 300]
+"""
+
+import argparse
+import dataclasses
+
+from repro.configs.base import ModelConfig
+from repro.models import RuntimeFlags, build_model
+from repro.training import AdamWConfig, DataConfig, train_loop
+
+CFG = ModelConfig(
+    name="demo-35m",
+    family="dense",
+    n_layers=6,
+    d_model=512,
+    n_heads=8,
+    n_kv_heads=4,
+    d_ff=1536,
+    vocab_size=2048,
+    rope_theta=1e4,
+    activation="silu",
+    dtype="float32",
+    vocab_pad_multiple=64,
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    import jax
+
+    model = build_model(CFG, RuntimeFlags(remat=True))
+    params, _ = model.init(jax.random.PRNGKey(0))
+    n = sum(p.size for p in jax.tree.leaves(params))
+    dc = DataConfig(vocab_size=CFG.vocab_size, seq_len=args.seq,
+                    batch_size=args.batch)
+    import math
+
+    print(f"model: {n/1e6:.1f}M params | uniform loss {math.log(CFG.vocab_size):.3f}"
+          f" | achievable floor {dc.loss_floor:.3f}")
+    _, hist = train_loop(
+        model, dc,
+        AdamWConfig(lr=3e-3, warmup_steps=20, total_steps=args.steps),
+        n_steps=args.steps, log_every=20,
+        ckpt_dir=args.ckpt_dir, ckpt_every=100,
+    )
+    print(f"\nloss {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f} "
+          f"(floor {dc.loss_floor:.3f})")
+
+
+if __name__ == "__main__":
+    main()

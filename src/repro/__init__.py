@@ -1,0 +1,15 @@
+"""repro — 6G EdgeAI ICC: Integrated Communication and Computing for LLM
+serving (Yang et al., CS.DC 2025), as a production JAX framework.
+
+Subpackages:
+  core      the paper: queueing analysis, latency model, 5G SLS, scheduler
+  configs   10 assigned architectures (+ the paper's Llama-2-7B)
+  models    composable model zoo (dense/moe/ssm/hybrid/vlm/audio)
+  kernels   Pallas TPU kernels + jnp oracles
+  serving   continuous-batching engine + ICC admission
+  training  AdamW, data, checkpointing, train loop
+  launch    production mesh, multi-pod dry-run, roofline, drivers
+  sharding  logical-axis rule sets (baseline + hillclimbed)
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,9 @@
+"""Architecture configs: one module per assigned arch + the paper's own.
+
+``get_config("mixtral-8x22b")`` -> full-size config (dry-run only);
+``get_config(name, smoke=True)`` -> reduced same-family variant for CPU.
+"""
+
+from .base import ModelConfig, get_config, list_configs, register, smoke_variant
+
+__all__ = ["ModelConfig", "get_config", "list_configs", "register", "smoke_variant"]

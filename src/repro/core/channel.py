@@ -1,0 +1,204 @@
+"""SLS-lite 5G uplink model (paper §IV-A "Communication Latency").
+
+The paper measures T_comm^{UE-BS} with a system-level simulator (FikoRE-style
+[15]): prompts are packetized into RLC PDUs and transmitted over the 5G air
+interface, so each packet sees transmission + queueing delay, competing with
+background traffic.
+
+We reproduce that at slot granularity (Table I numerology: 60 kHz SCS ->
+0.25 ms slots, 100 MHz at 3.7 GHz), with the two mechanisms that actually
+set small-packet uplink latency in a loaded cell:
+
+  1. **Grant acquisition.** A UE whose queue goes empty -> backlogged sends a
+     scheduling request and waits for an uplink grant. The gNB can issue a
+     bounded number of grants per slot (PDCCH capacity); requests queue.
+     This is the load-dependent term: as UEs scale up, grant-queue delay
+     climbs steeply near the PDCCH saturation point.
+  2. **PRB sharing.** Granted, backlogged UEs share the carrier equally each
+     slot; per-UE rate follows 3GPP UMa pathloss -> SINR -> Shannon SE
+     (floored: HARQ/link adaptation keeps cell-edge UEs out of deep outage).
+
+ICC's "job-aware packet prioritization" (§IV-B) enters in both places: job
+scheduling requests pre-empt background requests in the grant queue, and job
+bytes drain before background bytes. The 5G-MEC baseline is strictly FIFO:
+grant requests served in arrival order, and per-UE job bytes queue behind
+earlier background bytes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from collections import deque
+
+import numpy as np
+
+__all__ = ["ChannelConfig", "UplinkChannel"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ChannelConfig:
+    # Table I
+    carrier_ghz: float = 3.7
+    bandwidth_hz: float = 100e6
+    scs_hz: float = 60e3
+    background_bps: float = 0.5e6  # per UE
+    # Urban macrocell geometry / radio
+    cell_radius_m: float = 250.0
+    min_dist_m: float = 25.0
+    ue_tx_dbm: float = 23.0
+    noise_figure_db: float = 5.0
+    interference_margin_db: float = 6.0  # inter-cell interference (UMa)
+    gnb_height_m: float = 25.0
+    ue_height_m: float = 1.5
+    shadowing_std_db: float = 6.0
+    se_cap_bps_hz: float = 7.4  # 256QAM ceiling
+    # Link-adaptation floor: HARQ/repetition keeps cell-edge UEs above this
+    # effective SE instead of deep outage (calibration, see EXPERIMENTS.md).
+    se_floor_bps_hz: float = 1.0
+    phy_overhead: float = 0.75  # DMRS/control/guard overhead factor
+    # Uplink control plane: SR -> grant pipeline latency for an uncontended
+    # request, plus the PDCCH grant issue capacity per slot.
+    sr_cycle_s: float = 1.0e-3
+    grants_per_slot: float = 1.5  # ~6000 grants/s at 60 kHz SCS (calibrated)
+    # Background traffic packetization (mixed small-packet traffic).
+    bg_pdu_bytes: int = 400
+    # Payload model: bytes carried per prompt token (AR-glasses speech/text
+    # offload payload incl. RLC/PDCP/app headers). Calibration knob.
+    bytes_per_token: float = 256.0
+
+    @property
+    def slot_s(self) -> float:
+        # slot duration = 1 ms / (scs / 15 kHz)
+        return 1e-3 / (self.scs_hz / 15e3)
+
+
+class UplinkChannel:
+    """Slot-stepped uplink state for `n_ues` UEs."""
+
+    def __init__(self, cfg: ChannelConfig, n_ues: int, rng: np.random.Generator):
+        self.cfg = cfg
+        self.n = n_ues
+        self.rng = rng
+        # --- static per-UE link budget -------------------------------------
+        r = np.sqrt(rng.uniform(cfg.min_dist_m**2, cfg.cell_radius_m**2, n_ues))
+        d3d = np.sqrt(r**2 + (cfg.gnb_height_m - cfg.ue_height_m) ** 2)
+        # 3GPP TR 38.901 UMa NLOS pathloss.
+        pl_db = (
+            13.54
+            + 39.08 * np.log10(d3d)
+            + 20.0 * np.log10(cfg.carrier_ghz)
+            - 0.6 * (cfg.ue_height_m - 1.5)
+        )
+        pl_db += rng.normal(0.0, cfg.shadowing_std_db, n_ues)
+        noise_dbm = -174.0 + 10.0 * np.log10(cfg.bandwidth_hz) + cfg.noise_figure_db
+        snr_db = cfg.ue_tx_dbm - pl_db - noise_dbm - cfg.interference_margin_db
+        se = np.clip(
+            np.log2(1.0 + 10.0 ** (snr_db / 10.0)),
+            cfg.se_floor_bps_hz,
+            cfg.se_cap_bps_hz,
+        )
+        # bits a UE moves in one slot if given the whole carrier
+        self.full_carrier_bits_per_slot = (
+            se * cfg.bandwidth_hz * cfg.phy_overhead * cfg.slot_s
+        )
+        # --- queues (bits) ---------------------------------------------------
+        self.bg_bits = np.zeros(n_ues)
+        self.job_bits = np.zeros(n_ues)
+        # MEC FIFO coupling: background bits queued ahead of the job burst.
+        self.bg_ahead_of_job = np.zeros(n_ues)
+        # --- grant state -----------------------------------------------------
+        self.job_granted = np.zeros(n_ues, dtype=bool)
+        self.bg_granted = np.zeros(n_ues, dtype=bool)
+        self._seq = itertools.count()
+        self._job_reqs: deque = deque()  # (seq, ue, ready_time)
+        self._bg_reqs: deque = deque()
+        self._grant_credit = 0.0
+        # background packet arrivals
+        self._bg_pkt_bits = cfg.bg_pdu_bytes * 8.0
+        self._bg_pkt_per_slot = cfg.background_bps * cfg.slot_s / self._bg_pkt_bits
+
+    # -------------------------------------------------------------- arrivals
+    def add_background(self, now: float) -> None:
+        pkts = self.rng.poisson(self._bg_pkt_per_slot, self.n)
+        for ue in np.nonzero(pkts)[0]:
+            ue = int(ue)
+            if self.bg_bits[ue] <= 0.0 and not self.bg_granted[ue]:
+                self._bg_reqs.append((next(self._seq), ue, now + self.cfg.sr_cycle_s))
+            self.bg_bits[ue] += pkts[ue] * self._bg_pkt_bits
+
+    def add_job_bits(self, ue: int, bits: float, now: float) -> None:
+        if self.job_bits[ue] <= 0.0 and not self.job_granted[ue]:
+            self._job_reqs.append((next(self._seq), ue, now + self.cfg.sr_cycle_s))
+        self.job_bits[ue] += bits
+        # MEC FIFO: background queued now is ahead of this burst.
+        self.bg_ahead_of_job[ue] = self.bg_bits[ue]
+
+    # ------------------------------------------------------------ grant loop
+    def _issue_grants(self, now: float, prioritize_jobs: bool) -> None:
+        self._grant_credit += self.cfg.grants_per_slot
+        while self._grant_credit >= 1.0:
+            job_ok = bool(self._job_reqs) and self._job_reqs[0][2] <= now
+            bg_ok = bool(self._bg_reqs) and self._bg_reqs[0][2] <= now
+            if not job_ok and not bg_ok:
+                break
+            if prioritize_jobs:
+                take_job = job_ok
+            else:  # strict FIFO by request sequence number
+                if job_ok and bg_ok:
+                    take_job = self._job_reqs[0][0] < self._bg_reqs[0][0]
+                else:
+                    take_job = job_ok
+            if take_job:
+                _, ue, _ = self._job_reqs.popleft()
+                self.job_granted[ue] = True
+            else:
+                _, ue, _ = self._bg_reqs.popleft()
+                self.bg_granted[ue] = True
+            self._grant_credit -= 1.0
+
+    # ------------------------------------------------------------------ slot
+    def step(self, now: float, prioritize_jobs: bool) -> np.ndarray:
+        """Advance one slot; returns per-UE job bits drained this slot."""
+        self._issue_grants(now, prioritize_jobs)
+        job_ready = (self.job_bits > 0.0) & self.job_granted
+        # In the FIFO baseline a UE's single RLC queue drains in order, so a
+        # grant of either kind serves the head of the queue.
+        any_grant = self.job_granted | self.bg_granted
+        if not prioritize_jobs:
+            job_ready = (self.job_bits > 0.0) & any_grant
+        bg_ready = (self.bg_bits > 0.0) & any_grant
+        active = job_ready | bg_ready
+        n_active = int(active.sum())
+        job_tx = np.zeros(self.n)
+        if n_active == 0:
+            return job_tx
+
+        cap = np.zeros(self.n)
+        if prioritize_jobs:
+            # ICC: UEs with job traffic split the carrier first.
+            n_job = int(job_ready.sum())
+            if n_job > 0:
+                cap[job_ready] = self.full_carrier_bits_per_slot[job_ready] / n_job
+                job_tx = np.minimum(self.job_bits, cap)
+                leftover = cap - job_tx
+                bg_tx = np.minimum(self.bg_bits, np.where(bg_ready, leftover, 0.0))
+            else:
+                cap[active] = self.full_carrier_bits_per_slot[active] / n_active
+                bg_tx = np.minimum(self.bg_bits, np.where(bg_ready, cap, 0.0))
+        else:
+            # 5G MEC: equal share among granted backlogged UEs, per-UE FIFO.
+            cap[active] = self.full_carrier_bits_per_slot[active] / n_active
+            bg_first = np.minimum(self.bg_ahead_of_job, cap)
+            rem = cap - bg_first
+            job_tx = np.minimum(np.where(job_ready, self.job_bits, 0.0), rem)
+            rem = rem - job_tx
+            bg_rest = np.minimum(self.bg_bits - bg_first, np.where(bg_ready, rem, 0.0))
+            bg_tx = bg_first + bg_rest
+            self.bg_ahead_of_job = np.maximum(self.bg_ahead_of_job - bg_first, 0.0)
+
+        self.bg_bits = np.maximum(self.bg_bits - bg_tx, 0.0)
+        self.job_bits = np.maximum(self.job_bits - job_tx, 0.0)
+        self.job_granted &= self.job_bits > 1e-9
+        self.bg_granted &= self.bg_bits > 1e-9
+        return job_tx

@@ -1,0 +1,182 @@
+"""Roofline LLM-inference latency model (paper §IV-A, Eq. 7-8) — generalized.
+
+The paper models the compute latency of one inference job J on one GPU as
+
+    T_prefill  = max( N_input * C_LLM / G_comp,  M_LLM / G_mem )       (Eq. 7)
+    T_tokengen = N_output * max( C_LLM / G_comp, M_LLM / G_mem )       (Eq. 8)
+    C_LLM      = 2 * n_params   (FLOPs / token)
+
+We keep that exact model (``fidelity="paper"``) for the faithful
+reproduction of Figs. 6-7, and extend it (``fidelity="extended"``) with the
+terms the paper omits but that dominate at the scales of our assigned
+architectures:
+
+  * KV-cache read traffic during decode (grows with context length; it is
+    THE memory term for long_500k decode),
+  * active-vs-total parameters for MoE (compute uses active, weight loading
+    uses total),
+  * batched service (weights are loaded once per step, not once per job),
+  * a collective term for sharded serving on a TPU mesh (ICI all-reduce
+    bytes per layer for tensor parallelism) — the TPU-native analogue of the
+    paper's "scale GPU count" knob in Fig. 7.
+
+All latencies are seconds.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal, Optional
+
+__all__ = [
+    "HardwareSpec",
+    "ModelProfile",
+    "LatencyModel",
+    "TPU_V5E",
+    "A100",
+    "GH200_NVL2",
+    "LLAMA2_7B",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    """One accelerator (or an aggregated slice of them)."""
+
+    name: str
+    flops: float  # peak FLOP/s for the serving dtype
+    hbm_bw: float  # bytes/s
+    hbm_bytes: float  # capacity, bytes
+    ici_bw: float = 0.0  # per-link interconnect bytes/s (0 = single device)
+
+    def scaled(self, n: int) -> "HardwareSpec":
+        """Aggregate n devices (the paper's Fig. 7 'GPU capacity' axis)."""
+        return dataclasses.replace(
+            self,
+            name=f"{n}x{self.name}",
+            flops=self.flops * n,
+            hbm_bw=self.hbm_bw * n,
+            hbm_bytes=self.hbm_bytes * n,
+        )
+
+
+# Hardware presets. v5e numbers are the assignment constants; GPU numbers are
+# the datasheet values the paper cites ([17], [18]).
+TPU_V5E = HardwareSpec("tpu-v5e", flops=197e12, hbm_bw=819e9, hbm_bytes=16e9, ici_bw=50e9)
+A100 = HardwareSpec("a100", flops=312e12, hbm_bw=2039e9, hbm_bytes=80e9)
+# GH200-NVL2: two Grace-Hopper superchips (2 x ~989 TF fp16, 2 x 4.9 TB/s HBM3e).
+GH200_NVL2 = HardwareSpec("gh200-nvl2", flops=2 * 989e12, hbm_bw=2 * 4.9e12, hbm_bytes=2 * 144e9)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelProfile:
+    """What the latency model needs to know about one architecture."""
+
+    name: str
+    n_params: float  # total parameters
+    n_active_params: float  # parameters touched per token (== n_params unless MoE)
+    bytes_per_param: float  # serving dtype width
+    kv_bytes_per_token: float  # per-token KV cache footprint (0 for SSM decode)
+    state_bytes: float = 0.0  # recurrent state footprint (SSM/hybrid)
+    n_layers: int = 0
+    d_model: int = 0
+
+    @property
+    def model_bytes(self) -> float:
+        return self.n_params * self.bytes_per_param
+
+    @property
+    def flops_per_token(self) -> float:
+        # Paper: C_LLM = 2 * params (active params for MoE).
+        return 2.0 * self.n_active_params
+
+
+LLAMA2_7B = ModelProfile(
+    name="llama2-7b",
+    n_params=7e9,
+    n_active_params=7e9,
+    bytes_per_param=2.0,  # FP16, Table I
+    kv_bytes_per_token=2 * 32 * 32 * 128 * 2.0,  # 2(k,v) * L * H * d_h * fp16
+    n_layers=32,
+    d_model=4096,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class LatencyModel:
+    """Predict prefill/decode latency for jobs on a hardware target.
+
+    fidelity="paper"    -> exactly Eq. 7/8 (used for the faithful repro).
+    fidelity="extended" -> adds KV-cache reads, batching, collective term.
+    """
+
+    hw: HardwareSpec
+    model: ModelProfile
+    fidelity: Literal["paper", "extended"] = "paper"
+    tp_degree: int = 1  # tensor-parallel width (extended mode collective term)
+
+    # ----------------------------------------------------------- paper mode
+    def _paper_prefill(self, n_input: int) -> float:
+        c = n_input * self.model.flops_per_token
+        return max(c / self.hw.flops, self.model.model_bytes / self.hw.hbm_bw)
+
+    def _paper_decode(self, n_output: int) -> float:
+        per_tok = max(
+            self.model.flops_per_token / self.hw.flops,
+            self.model.model_bytes / self.hw.hbm_bw,
+        )
+        return n_output * per_tok
+
+    # -------------------------------------------------------- extended mode
+    def _collective_per_token(self) -> float:
+        """Tensor-parallel all-reduce bytes/token over ICI (ring, 2 rounds/layer).
+
+        2 all-reduces per transformer layer (attn out, mlp out), each moving
+        2*(tp-1)/tp * d_model * bytes per token through each link.
+        """
+        if self.tp_degree <= 1 or self.hw.ici_bw <= 0:
+            return 0.0
+        bytes_per_layer = (
+            2 * 2 * (self.tp_degree - 1) / self.tp_degree
+            * self.model.d_model * self.model.bytes_per_param
+        )
+        return self.model.n_layers * bytes_per_layer / self.hw.ici_bw
+
+    def _ext_prefill(self, n_input: int, batch: int) -> float:
+        c = batch * n_input * self.model.flops_per_token
+        mem = self.model.model_bytes + batch * n_input * self.model.kv_bytes_per_token
+        coll = batch * n_input * self._collective_per_token()
+        return max(c / self.hw.flops, mem / self.hw.hbm_bw) + coll
+
+    def _ext_decode(self, n_output: int, context: int, batch: int) -> float:
+        t = 0.0
+        for i in range(n_output):
+            ctx = context + i
+            c = batch * self.model.flops_per_token
+            mem = (
+                self.model.model_bytes
+                + batch * (ctx * self.model.kv_bytes_per_token + self.model.state_bytes)
+            )
+            t += max(c / self.hw.flops, mem / self.hw.hbm_bw) + batch * self._collective_per_token()
+        return t
+
+    # -------------------------------------------------------------- public
+    def prefill_latency(self, n_input: int, batch: int = 1) -> float:
+        if self.fidelity == "paper":
+            return self._paper_prefill(n_input) * (batch if batch > 1 else 1)
+        return self._ext_prefill(n_input, batch)
+
+    def decode_latency(self, n_output: int, context: int = 0, batch: int = 1) -> float:
+        if self.fidelity == "paper":
+            return self._paper_decode(n_output) * (batch if batch > 1 else 1)
+        return self._ext_decode(n_output, context, batch)
+
+    def job_latency(self, n_input: int, n_output: int, batch: int = 1) -> float:
+        """Total T_comp for one job (paper: T_prefill + T_tokengen)."""
+        return self.prefill_latency(n_input, batch) + self.decode_latency(
+            n_output, context=n_input, batch=batch
+        )
+
+    def service_rate(self, n_input: int, n_output: int) -> float:
+        """Jobs/second the node can sustain (mu2 in the queueing model)."""
+        return 1.0 / self.job_latency(n_input, n_output)

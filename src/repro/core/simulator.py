@@ -1,0 +1,214 @@
+"""System-level simulator for ICC vs 5G MEC (paper §IV, Fig. 5).
+
+Pipeline per job (real-time translation on AR glasses, Table I):
+
+  UE generates job (Poisson, rate lambda/UE)
+    -> uplink packets over the 5G air interface   (channel.UplinkChannel)
+    -> wireline hop gNB -> computing node          (constant, 5 or 20 ms)
+    -> compute queue + LLM inference               (scheduler.ComputeNode)
+
+Schemes (paper §III-B / §IV-C):
+
+  * ``icc``           joint mgmt, RAN node (5 ms), packet priority,
+                      priority queue + deadline drop.
+  * ``disjoint_ran``  disjoint mgmt, RAN node (5 ms), no packet priority,
+                      FIFO compute, sub-budget drop.
+  * ``disjoint_mec``  disjoint mgmt, MEC node (20 ms): the 5G-MEC baseline.
+
+Satisfaction (Def. 1): joint   -> T_E2E <= b_total;
+                       disjoint-> T_E2E <= b_total  AND  T_comm <= b_comm
+                                  AND T_comp <= b_comp.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, List, Literal, Optional
+
+import numpy as np
+
+from .channel import ChannelConfig, UplinkChannel
+from .latency_model import LatencyModel
+from .scheduler import ComputeNode, Job
+
+__all__ = ["SchemeConfig", "SimConfig", "SimResult", "SCHEMES", "simulate"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SchemeConfig:
+    name: str
+    t_wireline: float
+    packet_priority: bool
+    compute_policy: Literal["fifo", "priority"]
+    management: Literal["joint", "disjoint"]
+    b_comm: float = 0.024  # paper §III-B split
+    b_comp: float = 0.056
+    drop_infeasible: bool = True
+
+
+# Deadline-aware dropping is part of ICC's joint latency management
+# (§IV-B "any job expected to leave ... is dropped"); the 5G-MEC disjoint
+# baselines have no deadline awareness, so they queue doomed jobs (FIFO).
+SCHEMES: Dict[str, SchemeConfig] = {
+    "icc": SchemeConfig("icc", 0.005, True, "priority", "joint"),
+    "disjoint_ran": SchemeConfig(
+        "disjoint_ran", 0.005, False, "fifo", "disjoint", drop_infeasible=False
+    ),
+    "disjoint_mec": SchemeConfig(
+        "disjoint_mec", 0.020, False, "fifo", "disjoint", drop_infeasible=False
+    ),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class SimConfig:
+    n_ues: int = 60
+    lam_per_ue: float = 1.0  # jobs/s/UE (Table I)
+    n_input: int = 15
+    n_output: int = 15
+    b_total: float = 0.080
+    sim_time: float = 30.0
+    warmup: float = 2.0
+    seed: int = 0
+    channel: ChannelConfig = dataclasses.field(default_factory=ChannelConfig)
+
+
+@dataclasses.dataclass
+class SimResult:
+    scheme: str
+    n_jobs: int
+    satisfaction: float
+    drop_rate: float
+    avg_comm: float  # mean T_comm (UE->compute-node arrival), satisfied+unsatisfied
+    avg_comp: float  # mean T_comp (queue + inference)
+    avg_e2e: float
+    avg_tokens_per_s: float  # paper Fig. 7 bar metric
+
+    def row(self) -> str:
+        return (
+            f"{self.scheme:14s} jobs={self.n_jobs:6d} sat={self.satisfaction:6.3f} "
+            f"drop={self.drop_rate:5.3f} comm={self.avg_comm*1e3:6.2f}ms "
+            f"comp={self.avg_comp*1e3:6.2f}ms e2e={self.avg_e2e*1e3:6.2f}ms "
+            f"tok/s={self.avg_tokens_per_s:7.1f}"
+        )
+
+
+def simulate(
+    scheme: SchemeConfig,
+    sim: SimConfig,
+    service_time: Callable[[Job], float],
+) -> SimResult:
+    """Run one slot-stepped simulation and score Def.-1 satisfaction.
+
+    `service_time(job)` is the LLM inference latency model — analytic
+    (core.latency_model), measured (serving engine calibration), or random
+    (queueing-theory cross-check).
+    """
+    rng = np.random.default_rng(sim.seed)
+    ch = UplinkChannel(sim.channel, sim.n_ues, rng)
+    node = ComputeNode(
+        service_time,
+        policy=scheme.compute_policy,
+        drop_infeasible=scheme.drop_infeasible,
+        comp_budget=scheme.b_comp if scheme.management == "disjoint" else None,
+    )
+
+    slot = sim.channel.slot_s
+    n_slots = int(math.ceil(sim.sim_time / slot))
+    bits_per_job = sim.n_input * sim.channel.bytes_per_token * 8.0
+
+    # Pre-draw Poisson arrival counts per (slot, ue) lazily per slot.
+    lam_slot = sim.lam_per_ue * slot
+    uid = 0
+    # per-UE FIFO of (job, remaining_bits) bursts awaiting uplink
+    in_flight: Dict[int, List[List]] = {u: [] for u in range(sim.n_ues)}
+    jobs: List[Job] = []
+    wire_queue: List[Job] = []  # jobs in the wireline pipe, sorted by arrival
+
+    for s in range(n_slots):
+        now = s * slot
+        # 1. arrivals at UEs
+        counts = rng.poisson(lam_slot, sim.n_ues)
+        for ue in np.nonzero(counts)[0]:
+            for _ in range(int(counts[ue])):
+                j = Job(uid, int(ue), now, sim.n_input, sim.n_output, sim.b_total,
+                        bits=bits_per_job)
+                uid += 1
+                jobs.append(j)
+                in_flight[int(ue)].append([j, j.bits])
+                ch.add_job_bits(int(ue), j.bits, now)
+        ch.add_background(now)
+
+        # 2. one slot of uplink
+        drained = ch.step(now, prioritize_jobs=scheme.packet_priority)
+        t_slot_end = now + slot
+        for ue in np.nonzero(drained > 0)[0]:
+            ue = int(ue)
+            bits = float(drained[ue])
+            # complete jobs FIFO within the UE's burst queue
+            while bits > 1e-9 and in_flight[ue]:
+                entry = in_flight[ue][0]
+                use = min(bits, entry[1])
+                entry[1] -= use
+                bits -= use
+                if entry[1] <= 1e-9:
+                    in_flight[ue].pop(0)
+                    j = entry[0]
+                    j.t_compute_arrival = t_slot_end + scheme.t_wireline
+                    wire_queue.append(j)
+                else:
+                    break
+
+        # 3. hand over wireline deliveries, run the compute node
+        still = []
+        for j in wire_queue:
+            if j.t_compute_arrival <= t_slot_end:
+                node.submit(j)
+            else:
+                still.append(j)
+        wire_queue = still
+        node.run_until(t_slot_end)
+
+    node.run_until(float("inf"))
+
+    # ------------------------------------------------------------- scoring
+    scored = [
+        j for j in jobs
+        if sim.warmup <= j.t_gen <= sim.sim_time - 2 * sim.b_total
+    ]
+    n = len(scored)
+    if n == 0:
+        return SimResult(scheme.name, 0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0)
+
+    sat = 0
+    comm, comp, e2e, tps = [], [], [], []
+    for j in scored:
+        if j.dropped or math.isnan(j.t_complete):
+            continue
+        t_comm = j.t_comm
+        t_comp = j.t_complete - j.t_compute_arrival
+        comm.append(t_comm)
+        comp.append(t_comp)
+        e2e.append(j.e2e)
+        tps.append((j.n_input + j.n_output) / j.e2e)
+        if scheme.management == "joint":
+            ok = j.e2e <= j.b_total
+        else:
+            ok = (
+                j.e2e <= j.b_total
+                and t_comm <= scheme.b_comm
+                and t_comp <= scheme.b_comp
+            )
+        sat += int(ok)
+    n_dropped = sum(1 for j in scored if j.dropped or math.isnan(j.t_complete))
+    return SimResult(
+        scheme=scheme.name,
+        n_jobs=n,
+        satisfaction=sat / n,
+        drop_rate=n_dropped / n,
+        avg_comm=float(np.mean(comm)) if comm else float("nan"),
+        avg_comp=float(np.mean(comp)) if comp else float("nan"),
+        avg_e2e=float(np.mean(e2e)) if e2e else float("nan"),
+        avg_tokens_per_s=float(np.mean(tps)) if tps else float("nan"),
+    )

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the serving hot path.
+
+Each kernel ships three layers:
+  <name>.py — pl.pallas_call + BlockSpec VMEM tiling (TPU target)
+  ref.py    — pure-jnp oracle (allclose ground truth)
+  ops.py    — jitted dispatch (TPU: kernel; CPU: oracle)
+"""
+
+from . import ops, ref
+from .decode_attention import decode_attention
+from .flash_attention import flash_attention
+from .rmsnorm import rmsnorm
+
+__all__ = ["ops", "ref", "flash_attention", "decode_attention", "rmsnorm"]

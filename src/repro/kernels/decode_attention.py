@@ -1,0 +1,129 @@
+"""Pallas TPU flash-decoding: one query token against a long KV cache.
+
+Grid (B, H, nk): KV-sequence innermost/sequential; (m, l, acc) running
+softmax in VMEM scratch. The cache slot validity comes from an absolute-
+position array (B, Sc) streamed blockwise through SMEM-friendly int32
+tiles; masking covers empty slots (pos < 0), future slots (pos > q_pos)
+and the sliding window for ring caches.
+
+This is the serving hot spot of long_500k: bytes-bound streaming of the
+KV cache through VMEM at (1, 1, bk, dh) tiles.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["decode_attention"]
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    pos_ref,  # (1, 1) int32 — query position, SMEM-ish prefetch
+    q_ref,  # (1, 1, dh)
+    k_ref, v_ref,  # (1, 1, bk, dh)
+    kvpos_ref,  # (1, bk) int32
+    o_ref,  # (1, 1, dh)
+    m_ref, l_ref, acc_ref,  # scratch (1,), (1,), (1, dh) f32
+    *,
+    bk: int,
+    nk: int,
+    window: int,
+    scale: float,
+):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)  # (1, dh)
+    k = k_ref[0, 0].astype(jnp.float32)  # (bk, dh)
+    v = v_ref[0, 0].astype(jnp.float32)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # (1, bk)
+
+    qpos = pos_ref[0, 0]
+    kvpos = kvpos_ref[0][None, :]  # (1, bk)
+    ok = (kvpos >= 0) & (kvpos <= qpos)
+    if window > 0:
+        ok &= kvpos > qpos - window
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev, l_prev = m_ref[...], l_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    # all-masked-so-far rows: exp(NEG_INF - NEG_INF) must not become 1
+    p = jnp.where(m_new[:, None] <= NEG_INF / 2, 0.0, jnp.exp(s - m_new[:, None]))
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_prev * corr + p.sum(axis=1)
+    m_ref[...] = m_new
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(ik == nk - 1)
+    def _fin():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "block_k", "interpret")
+)
+def decode_attention(
+    q: jax.Array,  # (B, H, dh)
+    k: jax.Array,  # (B, K, Sc, dh)
+    v: jax.Array,  # (B, K, Sc, dh)
+    kv_pos: jax.Array,  # (B, Sc) int32, -1 = empty
+    pos: jax.Array,  # (B,) int32 query positions
+    *,
+    window: int = 0,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    B, H, dh = q.shape
+    K, Sc = k.shape[1], k.shape[2]
+    G = H // K
+    bk = min(block_k, Sc)
+    scale = 1.0 / math.sqrt(dh)
+
+    pad = (-Sc) % bk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pad)), constant_values=-1)
+    nk = (Sc + pad) // bk
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, bk=bk, nk=nk, window=window, scale=scale),
+        grid=(B, H, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, h, ik: (b, 0)),
+            pl.BlockSpec((1, 1, dh), lambda b, h, ik: (b, h, 0)),
+            pl.BlockSpec((1, 1, bk, dh), lambda b, h, ik: (b, h // G, ik, 0)),
+            pl.BlockSpec((1, 1, bk, dh), lambda b, h, ik: (b, h // G, ik, 0)),
+            pl.BlockSpec((1, bk), lambda b, h, ik: (b, ik)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, dh), lambda b, h, ik: (b, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1, dh), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(pos[:, None], q, k, v, kv_pos)
+    return out

@@ -1,0 +1,67 @@
+"""Jitted dispatch layer over the Pallas kernels.
+
+On a TPU backend the compiled kernels run natively; everywhere else the
+call sites fall back to the pure-jnp reference (identical math, validated
+by tests/test_kernels.py in interpret mode). `attention_core` calls
+`flash_attention` with the model-layer (B, S, K, G, dh) layout; the
+wrappers translate to the kernel layouts.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .decode_attention import decode_attention as _decode_kernel
+from .flash_attention import flash_attention as _flash_kernel
+from .rmsnorm import rmsnorm as _rmsnorm_kernel
+
+__all__ = ["on_tpu", "flash_attention", "decode_attention", "rmsnorm"]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(
+    q: jax.Array,  # (B, Sq, K, G, dh) — model-layer layout
+    k: jax.Array,  # (B, Sk, K, dh)
+    v: jax.Array,
+    q_pos: jax.Array,  # accepted for API parity; kernel assumes arange layout
+    k_pos: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+) -> jax.Array:
+    B, Sq, K, G, dh = q.shape
+    qk = q.transpose(0, 2, 3, 1, 4).reshape(B, K * G, Sq, dh)
+    kk = k.transpose(0, 2, 1, 3)
+    vk = v.transpose(0, 2, 1, 3)
+    if on_tpu():
+        out = _flash_kernel(qk, kk, vk, causal=causal, window=window)
+    else:
+        out = ref.flash_attention_ref(qk, kk, vk, causal=causal, window=window)
+    return out.reshape(B, K, G, Sq, dh).transpose(0, 3, 1, 2, 4)
+
+
+def decode_attention(
+    q: jax.Array,  # (B, H, dh)
+    k: jax.Array,  # (B, K, Sc, dh)
+    v: jax.Array,
+    kv_pos: jax.Array,  # (B, Sc)
+    pos: jax.Array,  # (B,)
+    *,
+    window: int = 0,
+) -> jax.Array:
+    if on_tpu():
+        return _decode_kernel(q, k, v, kv_pos, pos, window=window)
+    return ref.decode_attention_ref(q, k, v, kv_pos, pos, window=window)
+
+
+def rmsnorm(x: jax.Array, gamma: jax.Array, eps: float = 1e-5) -> jax.Array:
+    if on_tpu():
+        return _rmsnorm_kernel(x, gamma, eps=eps)
+    return ref.rmsnorm_ref(x, gamma, eps)

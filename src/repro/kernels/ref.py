@@ -1,0 +1,74 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["flash_attention_ref", "decode_attention_ref", "rmsnorm_ref"]
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(
+    q: jax.Array,  # (B, H, Sq, dh)
+    k: jax.Array,  # (B, K, Sk, dh)
+    v: jax.Array,  # (B, K, Sk, dh)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    kv_len: int | None = None,  # valid KV prefix (None = all)
+) -> jax.Array:
+    """Naive full-materialization attention; GQA by head mapping h -> h//G."""
+    B, H, Sq, dh = q.shape
+    K = k.shape[1]
+    G = H // K
+    qh = q.reshape(B, K, G, Sq, dh)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qh, k).astype(jnp.float32)
+    s = s / math.sqrt(dh)
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(k.shape[2])[None, :]
+    ok = jnp.ones((Sq, k.shape[2]), bool)
+    if kv_len is not None:
+        ok &= kpos < kv_len
+    if causal:
+        ok &= kpos <= qpos
+    if window > 0:
+        ok &= kpos > qpos - window
+    s = jnp.where(ok, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    # fully-masked rows emit 0 (online-softmax l=0 convention)
+    p = p * ok.any(-1)[None, None, None, :, None].astype(p.dtype)
+    out = jnp.einsum("bkgqs,bksd->bkgqd", p, v)
+    return out.reshape(B, H, Sq, dh).astype(q.dtype)
+
+
+def decode_attention_ref(
+    q: jax.Array,  # (B, H, dh)
+    k: jax.Array,  # (B, K, Sc, dh)
+    v: jax.Array,  # (B, K, Sc, dh)
+    kv_pos: jax.Array,  # (B, Sc) absolute positions, -1 = empty slot
+    pos: jax.Array,  # (B,) current query position
+    *,
+    window: int = 0,
+) -> jax.Array:
+    B, H, dh = q.shape
+    K = k.shape[1]
+    G = H // K
+    qh = q.reshape(B, K, G, dh)
+    s = jnp.einsum("bkgd,bksd->bkgs", qh, k).astype(jnp.float32) / math.sqrt(dh)
+    ok = (kv_pos >= 0) & (kv_pos <= pos[:, None])
+    if window > 0:
+        ok &= kv_pos > (pos[:, None] - window)
+    s = jnp.where(ok[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgs,bksd->bkgd", p, v)
+    return out.reshape(B, H, dh).astype(q.dtype)
+
+
+def rmsnorm_ref(x: jax.Array, gamma: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * gamma

@@ -1,0 +1,212 @@
+"""Post-SPMD HLO cost extraction with while-loop trip-count multiplication.
+
+`compiled.cost_analysis()` counts a while (lax.scan) body ONCE — useless
+for scan-over-layers models. This module parses `compiled.as_text()`
+instead:
+
+  * builds the computation call graph (while condition/body, fusion
+    `calls=`, `to_apply=`),
+  * multiplies every computation's costs by the product of enclosing
+    while trip counts (XLA CPU annotates `known_trip_count` in
+    backend_config; fallback: the constant in the loop condition),
+  * dot FLOPs: 2 * |result| * prod(contracting dims)  (matmul-FLOPs
+    convention — elementwise FLOPs excluded, as in MFU accounting),
+  * dot traffic: operand + result bytes per execution (upper bound on
+    HBM traffic of the compute stream: fusion reuse not modeled),
+  * collective bytes per class (all-gather / all-reduce / reduce-scatter /
+    all-to-all / collective-permute). Ring-algorithm traffic weighting,
+    with the (N-1)/N factor ~ 1: all-reduce moves 2x its tensor size
+    (reduce-scatter + all-gather phases), all-gather its RESULT size,
+    reduce-scatter its OPERAND size, all-to-all / collective-permute the
+    tensor size once.
+
+Everything is per-PROGRAM (i.e. per device, since SPMD programs are
+per-device): multiply by chip count for cluster totals where needed.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["HloCost", "analyze_hlo"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*?)\s([a-z][\w\-]*)\((.*)$"
+)
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->")
+
+COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _type_bytes(t: str) -> int:
+    """Total bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(t):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _first_dims(t: str) -> Optional[List[int]]:
+    m = _SHAPE_RE.search(t)
+    if not m:
+        return None
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0  # dot FLOPs, trip-count-corrected (per device)
+    dot_bytes: float = 0.0  # dot operand+result traffic (per device)
+    collective_bytes: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float)
+    )
+    n_while: int = 0
+    unknown_trip_counts: int = 0
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return float(sum(self.collective_bytes.values()))
+
+
+def analyze_hlo(text: str) -> HloCost:
+    # ---- split into computations --------------------------------------
+    comps: Dict[str, List[str]] = {}
+    entry: Optional[str] = None
+    cur: Optional[str] = None
+    for line in text.splitlines():
+        if not line.strip():
+            continue
+        if not line.startswith(" ") and ("->" in line) and line.rstrip().endswith("{"):
+            m = _COMP_HDR_RE.match(line.strip())
+            if m:
+                cur = m.group(1)
+                comps[cur] = [line]
+                if line.startswith("ENTRY"):
+                    entry = cur
+                continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(line)
+
+    # ---- per-computation local costs + call edges ----------------------
+    local = {name: HloCost() for name in comps}
+    edges: Dict[str, List[Tuple[str, float]]] = {name: [] for name in comps}
+    cost_total = HloCost()
+
+    for name, lines in comps.items():
+        shapes: Dict[str, str] = {}
+        pending_dots = []  # (result_type, lhs_name, contracting_dims)
+        for raw in lines[1:]:
+            m = _INSTR_RE.match(raw)
+            if not m:
+                continue
+            iname, itype, op, rest = m.groups()
+            shapes[iname] = itype
+
+            if op == "dot":
+                ops = re.findall(r"%([\w.\-]+)", rest.split(")")[0])
+                cdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", raw)
+                cd = [int(x) for x in cdims.group(1).split(",")] if cdims and cdims.group(1) else []
+                pending_dots.append((itype, ops[0] if ops else None, cd,
+                                     [shapes_get for shapes_get in ops]))
+            elif op in COLLECTIVES:
+                b = _type_bytes(itype)  # result bytes
+                if op == "all-reduce":
+                    b *= 2.0  # RS + AG phases of a ring all-reduce
+                elif op == "reduce-scatter":
+                    # traffic is the (larger) operand; look it up
+                    ops_ = re.findall(r"%([\w.\-]+)", rest.split(")")[0])
+                    ob = sum(_type_bytes(shapes.get(o, "")) for o in ops_)
+                    b = max(b, ob)
+                local[name].collective_bytes[op] += b
+            elif op == "while":
+                cond = re.search(r"condition=%?([\w.\-]+)", raw)
+                body = re.search(r"body=%?([\w.\-]+)", raw)
+                trip = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', raw)
+                n = float(trip.group(1)) if trip else None
+                if n is None:
+                    local[name].unknown_trip_counts += 1
+                    n = 1.0
+                local[name].n_while += 1
+                if body:
+                    edges[name].append((body.group(1), n))
+                if cond:
+                    edges[name].append((cond.group(1), n))
+            elif op in ("fusion", "call", "map", "reduce", "reduce-window",
+                        "sort", "scatter", "select-and-scatter"):
+                for cm in re.finditer(
+                    r"(?:calls|to_apply)=%?([\w.\-]+)", raw
+                ):
+                    edges[name].append((cm.group(1), 1.0))
+            elif op == "conditional":
+                for cm in re.finditer(r"%([\w.\-]+)", raw.split("branch_computations")[-1]):
+                    if cm.group(1) in comps:
+                        edges[name].append((cm.group(1), 1.0))
+
+        # resolve dots now that all shapes in the computation are known
+        for itype, lhs, cd, opnames in pending_dots:
+            out_elems = 1
+            dims = _first_dims(itype) or []
+            for d in dims:
+                out_elems *= d
+            kprod = 1
+            ldims = _first_dims(shapes.get(lhs, "")) if lhs else None
+            if ldims:
+                for c in cd:
+                    if c < len(ldims):
+                        kprod *= ldims[c]
+            local[name].flops += 2.0 * out_elems * kprod
+            tb = _type_bytes(itype)
+            for on in opnames:
+                tb += _type_bytes(shapes.get(on, ""))
+            local[name].dot_bytes += tb
+
+    # ---- propagate multipliers from ENTRY ------------------------------
+    mult: Dict[str, float] = defaultdict(float)
+    if entry is None:
+        entry = next(iter(comps), None)
+    if entry is None:
+        return cost_total
+
+    # topological-ish propagation (call graph is a DAG in HLO)
+    stack = [(entry, 1.0)]
+    while stack:
+        node, m = stack.pop()
+        mult[node] += m
+        for child, em in edges.get(node, ()):  # noqa: B023
+            stack.append((child, m * em))
+
+    for name, lc in local.items():
+        m = mult.get(name, 0.0)
+        if m == 0.0:
+            continue
+        cost_total.flops += lc.flops * m
+        cost_total.dot_bytes += lc.dot_bytes * m
+        cost_total.n_while += int(lc.n_while * m > 0) and lc.n_while
+        cost_total.unknown_trip_counts += lc.unknown_trip_counts
+        for k, v in lc.collective_bytes.items():
+            cost_total.collective_bytes[k] += v * m
+    return cost_total

@@ -1,0 +1,24 @@
+"""Production mesh construction.
+
+A function (never a module-level constant) so importing this module does
+not touch jax device state. Single pod: 16x16 = 256 chips ("data",
+"model"); multi-pod: 2x16x16 = 512 chips with a leading "pod" axis (the
+data-parallel batch shards over ("pod", "data") jointly).
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_smoke_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_smoke_mesh() -> jax.sharding.Mesh:
+    """1-device mesh with the production axis names (CPU tests)."""
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,108 @@
+"""Roofline-term derivation from dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape x mesh), from the compiled per-device HLO:
+
+    compute term    = HLO_dot_FLOPs / peak_FLOP/s          (per device)
+    memory term     = HLO_dot_traffic / HBM_bw             (per device)
+    collective term = collective_bytes / link_bw           (per device)
+
+HLO costs come from launch.hlo_analysis (trip-count-corrected); all three
+are seconds-per-step for one device, directly comparable since SPMD
+devices are symmetric. MODEL_FLOPS uses the paper-standard accounting
+(6*N_active*tokens for training, 2*N_active*tokens for inference; the
+ratio MODEL_FLOPS / (chips * HLO_FLOPs_per_device) exposes remat /
+redundant-compute waste).
+
+Hardware: TPU v5e — 197 bf16 TFLOP/s, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from ..configs.base import ModelConfig
+from .hlo_analysis import HloCost
+from .specs import ShapeSpec
+
+__all__ = ["V5E", "RooflineTerms", "derive_roofline", "model_flops"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HwSpec:
+    flops: float
+    hbm_bw: float
+    ici_bw: float
+    hbm_bytes: float
+
+
+V5E = HwSpec(flops=197e12, hbm_bw=819e9, ici_bw=50e9, hbm_bytes=16e9)
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeSpec) -> float:
+    """Paper-standard useful FLOPs per step (6ND train / 2ND inference)."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.batch * shape.seq
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.batch * shape.seq
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence per step
+    return 2.0 * n_active * shape.batch
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float
+    hlo_flops_device: float
+    dot_bytes_device: float
+    collective_bytes_device: float
+    chips: int
+    useful_ratio: float  # MODEL_FLOPS / (chips * HLO_flops_device)
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        """No-overlap upper bound on step time."""
+        return self.compute_s + self.memory_s + self.collective_s
+
+    def as_dict(self) -> Dict:
+        return {
+            **dataclasses.asdict(self),
+            "dominant": self.dominant,
+            "step_s": self.step_s,
+        }
+
+
+def derive_roofline(
+    cost: HloCost,
+    cfg: ModelConfig,
+    shape: ShapeSpec,
+    chips: int,
+    hw: HwSpec = V5E,
+) -> RooflineTerms:
+    mf = model_flops(cfg, shape)
+    hlo_total = cost.flops * chips
+    return RooflineTerms(
+        compute_s=cost.flops / hw.flops,
+        memory_s=cost.dot_bytes / hw.hbm_bw,
+        collective_s=cost.total_collective_bytes / hw.ici_bw,
+        model_flops=mf,
+        hlo_flops_device=cost.flops,
+        dot_bytes_device=cost.dot_bytes,
+        collective_bytes_device=cost.total_collective_bytes,
+        chips=chips,
+        useful_ratio=mf / hlo_total if hlo_total else 0.0,
+    )

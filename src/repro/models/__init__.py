@@ -1,0 +1,6 @@
+"""Model zoo: composable JAX definitions for all assigned families."""
+
+from .common import RuntimeFlags
+from .model import Model, build_model, cross_entropy_loss
+
+__all__ = ["Model", "RuntimeFlags", "build_model", "cross_entropy_loss"]

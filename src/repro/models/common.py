@@ -1,0 +1,166 @@
+"""Shared building blocks for the model zoo.
+
+Parameters are plain nested dicts of jnp arrays. Every parameter is created
+through `Param.make` inside an `init_ctx()` so the *logical sharding axes*
+of each array are recorded in a parallel tree (same structure, `Axes`
+leaves) — single source of truth for `in_shardings` at lower time.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import Axes, constrain
+
+__all__ = [
+    "DTYPES",
+    "Initializer",
+    "init_ctx",
+    "make_param",
+    "axes_of",
+    "rms_norm",
+    "layer_norm",
+    "dense",
+    "activation_fn",
+    "RuntimeFlags",
+]
+
+DTYPES = {"bfloat16": jnp.bfloat16, "float32": jnp.float32, "float16": jnp.float16}
+
+
+@dataclasses.dataclass(frozen=True)
+class RuntimeFlags:
+    """Per-invocation execution knobs (orthogonal to the architecture)."""
+
+    attention_impl: str = "auto"  # auto | naive | chunked | pallas
+    q_chunk: int = 1024
+    kv_chunk: int = 1024
+    mamba_chunk: int = 256
+    mlstm_chunk: int = 256
+    window_override: int = 0  # force sliding-window serving (long_500k dense)
+    remat: bool = True  # activation checkpointing around each layer (train)
+    naive_below: int = 2048  # "auto" uses naive attention below this seq len
+    moe_dispatch: str = "scatter"  # scatter | einsum (Mesh-TF baseline)
+    # Shard the attention core by QUERY SEQUENCE over the model axis
+    # (context parallelism). The escape hatch for archs whose head count
+    # does not divide the model axis (llama4: 40 heads on a 16-wide axis
+    # -> heads fall back to replication and attention runs 16x redundant).
+    # Pairs with the "attn_q_seq" rule (ATTN_SEQ rule sets).
+    attn_seq_shard: bool = False
+
+    def attn_impl_for(self, seq: int) -> str:
+        if self.attention_impl != "auto":
+            return self.attention_impl
+        return "naive" if seq <= self.naive_below else "chunked"
+
+
+# --------------------------------------------------------------------------
+# Param creation with logical-axis recording
+# --------------------------------------------------------------------------
+
+_AXES_STACK: list = []
+
+
+@contextlib.contextmanager
+def init_ctx():
+    """Collect logical axes for params created within. Yields a dict that is
+    filled with an axes-tree mirroring the params returned by the block."""
+    col: Dict[str, Any] = {}
+    _AXES_STACK.append(col)
+    try:
+        yield col
+    finally:
+        _AXES_STACK.pop()
+
+
+def _record(path: Tuple[str, ...], axes: Axes) -> None:
+    if not _AXES_STACK:
+        return
+    node = _AXES_STACK[-1]
+    for k in path[:-1]:
+        node = node.setdefault(k, {})
+    node[path[-1]] = axes
+
+
+class Initializer:
+    """Splittable PRNG + path tracking for nested param dicts."""
+
+    def __init__(self, key: jax.Array, dtype, path: Tuple[str, ...] = ()):
+        self.key = key
+        self.dtype = dtype
+        self.path = path
+
+    def child(self, name: str) -> "Initializer":
+        self.key, sub = jax.random.split(self.key)
+        return Initializer(sub, self.dtype, self.path + (name,))
+
+    def param(
+        self,
+        name: str,
+        shape: Sequence[int],
+        axes: Sequence[Optional[str]],
+        scale: Optional[float] = None,
+        zeros: bool = False,
+        ones: bool = False,
+    ) -> jax.Array:
+        assert len(shape) == len(axes), (name, shape, axes)
+        _record(self.path + (name,), Axes(axes))
+        if ones:
+            return jnp.ones(shape, self.dtype)
+        if zeros:
+            return jnp.zeros(shape, self.dtype)
+        self.key, sub = jax.random.split(self.key)
+        if scale is None:
+            scale = 1.0 / math.sqrt(shape[0])  # fan-in on leading dim
+        return (jax.random.normal(sub, shape, jnp.float32) * scale).astype(self.dtype)
+
+
+def make_param(init: Initializer, *a, **k) -> jax.Array:
+    return init.param(*a, **k)
+
+
+def axes_of(col: Dict[str, Any]):
+    return col
+
+
+# --------------------------------------------------------------------------
+# Elementary ops
+# --------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(dt) * gamma
+
+
+def layer_norm(x: jax.Array, gamma: jax.Array, beta: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(dt) * gamma + beta
+
+
+def dense(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None) -> jax.Array:
+    y = jnp.einsum("...d,df->...f", x, w)
+    if b is not None:
+        y = y + b
+    return y
+
+
+def activation_fn(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "relu2":
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(f"unknown activation {name!r}")

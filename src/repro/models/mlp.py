@@ -1,0 +1,40 @@
+"""Feed-forward blocks: gated (SiLU/GELU) and 2-matrix squared-ReLU
+(Nemotron-4), with tensor-parallel sharding on the ffn axis.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..sharding import constrain
+from .common import Initializer, activation_fn
+
+__all__ = ["init_mlp", "mlp_forward"]
+
+
+def init_mlp(init: Initializer, cfg: ModelConfig, d_ff: int = 0) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    gated = cfg.activation in ("silu", "gelu")
+    p = {
+        "w1": init.param("w1", (d, f), ("p_embed", "p_ffn")),
+        "w2": init.param("w2", (f, d), ("p_ffn", "p_embed")),
+    }
+    if gated:
+        p["w3"] = init.param("w3", (d, f), ("p_embed", "p_ffn"))
+    return p
+
+
+def mlp_forward(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    act = activation_fn(cfg.activation)
+    h = jnp.einsum("...d,df->...f", x, p["w1"])
+    if "w3" in p:
+        h = act(h) * jnp.einsum("...d,df->...f", x, p["w3"])
+    else:
+        h = act(h)
+    h = constrain(h, ("batch", "seq", "ffn") if x.ndim == 3 else ("batch", "ffn"))
+    y = jnp.einsum("...f,fd->...d", h, p["w2"])
+    return constrain(
+        y, ("batch", "seq_res", "embed") if x.ndim == 3 else ("batch", "embed")
+    )

@@ -1,0 +1,84 @@
+"""Flat-npz checkpointing for arbitrary param/optimizer pytrees.
+
+Trees are flattened to path-keyed arrays ("layers/attn/wq", ...) inside a
+single .npz per step, with an atomic rename commit and latest-step
+discovery. Restores verify structure against a template tree.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import tempfile
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step"]
+
+_SEP = "/"
+
+
+def _flatten(tree: Any) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in path
+        )
+        arr = np.asarray(leaf)
+        if arr.dtype.kind == "V":  # ml_dtypes (bfloat16, fp8): byte-view
+            flat[key + ".__dtype__"] = np.asarray(arr.dtype.name)
+            arr = arr.view(np.uint8).reshape(arr.shape + (arr.dtype.itemsize,))
+        flat[key] = arr
+    return flat
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: Any) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    flat = _flatten(tree)
+    final = os.path.join(ckpt_dir, f"ckpt_{step:08d}.npz")
+    fd, tmp = tempfile.mkstemp(dir=ckpt_dir, suffix=".tmp")
+    with os.fdopen(fd, "wb") as f:
+        np.savez(f, **flat)
+    os.replace(tmp, final)  # atomic commit
+    return final
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [
+        int(m.group(1))
+        for f in os.listdir(ckpt_dir)
+        if (m := re.fullmatch(r"ckpt_(\d+)\.npz", f))
+    ]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(
+    ckpt_dir: str, template: Any, step: Optional[int] = None
+) -> Tuple[Any, int]:
+    """Restore into the structure of `template`; returns (tree, step)."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"ckpt_{step:08d}.npz")
+    data = np.load(path)
+    flat_t, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for p, leaf in flat_t:
+        key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k))) for k in p)
+        if key not in data:
+            raise KeyError(f"checkpoint {path} missing {key}")
+        arr = data[key]
+        if key + ".__dtype__" in data:  # ml_dtypes byte-view roundtrip
+            import ml_dtypes
+
+            dt = np.dtype(getattr(ml_dtypes, str(data[key + ".__dtype__"])))
+            arr = arr.view(dt).reshape(arr.shape[:-1])
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"{key}: ckpt {arr.shape} != template {leaf.shape}")
+        leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(jax.tree.structure(template), leaves), step

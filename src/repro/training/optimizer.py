@@ -1,0 +1,97 @@
+"""AdamW with decoupled weight decay and mixed-precision moments.
+
+Hand-rolled (no optax dependency). Moments are fp32 regardless of the
+param dtype (bf16 training keeps fp32 optimizer state — the standard
+mixed-precision recipe); the update is computed in fp32 and cast back.
+Optimizer-state sharding mirrors the param sharding (same logical axes).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "clip_by_global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+    def schedule(self, step: jax.Array) -> jax.Array:
+        """Linear warmup + cosine decay to min_lr_frac * lr."""
+        s = step.astype(jnp.float32)
+        warm = jnp.minimum(s / jnp.maximum(self.warmup_steps, 1), 1.0)
+        t = jnp.clip(
+            (s - self.warmup_steps) / max(self.total_steps - self.warmup_steps, 1),
+            0.0,
+            1.0,
+        )
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        frac = self.min_lr_frac + (1.0 - self.min_lr_frac) * cos
+        return self.lr * warm * frac
+
+
+def adamw_init(params: Any) -> dict:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> Tuple[Any, jax.Array]:
+    gnorm = jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+    )
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), gnorm
+
+
+def adamw_update(
+    cfg: AdamWConfig, params: Any, grads: Any, state: dict
+) -> Tuple[Any, dict, dict]:
+    """-> (new_params, new_state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state["step"] + 1
+    lr = cfg.schedule(step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g32 = g.astype(jnp.float32)
+        mu_n = b1 * mu + (1 - b1) * g32
+        nu_n = b2 * nu + (1 - b2) * g32 * g32
+        mhat = mu_n / bc1
+        vhat = nu_n / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2:  # decay matrices only (norms/biases exempt)
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        p_n = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return p_n, mu_n, nu_n
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_mu = treedef.flatten_up_to(state["mu"])
+    flat_nu = treedef.flatten_up_to(state["nu"])
+    out = [upd(p, g, m, n) for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_mu = treedef.unflatten([o[1] for o in out])
+    new_nu = treedef.unflatten([o[2] for o in out])
+    return new_p, {"mu": new_mu, "nu": new_nu, "step": step}, {
+        "grad_norm": gnorm,
+        "lr": lr,
+    }

@@ -1,0 +1,90 @@
+"""Attention-layer properties: chunked==naive (hypothesis-swept), GQA
+grouping, RoPE/M-RoPE behaviour, decode two-part softmax."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.models.attention import chunked_attention, naive_attention
+from repro.models.rope import apply_mrope, apply_rope, text_mrope_positions
+
+
+@st.composite
+def attn_case(draw):
+    B = draw(st.integers(1, 2))
+    K = draw(st.sampled_from([1, 2]))
+    G = draw(st.sampled_from([1, 2, 4]))
+    Sq = draw(st.integers(1, 40))
+    dh = draw(st.sampled_from([8, 16]))
+    causal = draw(st.booleans())
+    Sk = Sq if causal else draw(st.integers(1, 48))
+    window = draw(st.sampled_from([0, 4, 16]))
+    qc = draw(st.sampled_from([4, 8, 16]))
+    kc = draw(st.sampled_from([4, 8, 16]))
+    return B, K, G, Sq, Sk, dh, causal, window, qc, kc
+
+
+class TestChunkedEqualsNaive:
+    @given(case=attn_case())
+    @settings(max_examples=40, deadline=None)
+    def test_property(self, case):
+        B, K, G, Sq, Sk, dh, causal, window, qc, kc = case
+        kq, kk, kv = jax.random.split(jax.random.PRNGKey(Sq * Sk), 3)
+        q = jax.random.normal(kq, (B, Sq, K, G, dh))
+        k = jax.random.normal(kk, (B, Sk, K, dh))
+        v = jax.random.normal(kv, (B, Sk, K, dh))
+        qpos = jnp.broadcast_to(jnp.arange(Sq), (B, Sq))
+        kpos = jnp.broadcast_to(jnp.arange(Sk), (B, Sk))
+        a = naive_attention(q, k, v, qpos, kpos, causal, window)
+        b = chunked_attention(q, k, v, qpos, kpos, causal, window, qc, kc)
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), rtol=2e-5, atol=2e-5
+        )
+
+
+class TestGQA:
+    def test_kv_head_grouping(self):
+        """All G query heads of one KV head see the same K/V."""
+        B, Sq, K, G, dh = 1, 6, 2, 3, 8
+        q = jnp.ones((B, Sq, K, G, dh))
+        k = jax.random.normal(jax.random.PRNGKey(0), (B, Sq, K, dh))
+        v = jax.random.normal(jax.random.PRNGKey(1), (B, Sq, K, dh))
+        pos = jnp.broadcast_to(jnp.arange(Sq), (B, Sq))
+        out = naive_attention(q, k, v, pos, pos, True, 0)
+        # identical queries within a KV group -> identical outputs
+        np.testing.assert_allclose(out[:, :, :, 0], out[:, :, :, 1], rtol=1e-6)
+
+
+class TestRoPE:
+    def test_relative_shift_invariance(self):
+        """RoPE attention scores depend only on relative positions."""
+        dh, theta = 16, 1e4
+        q = jax.random.normal(jax.random.PRNGKey(0), (1, 1, 1, dh))
+        k = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, dh))
+        def score(p_q, p_k):
+            qr = apply_rope(q, jnp.asarray([[p_q]]), dh, theta)
+            kr = apply_rope(k, jnp.asarray([[p_k]]), dh, theta)
+            return float(jnp.sum(qr * kr))
+        assert abs(score(5, 3) - score(105, 103)) < 1e-4
+
+    def test_mrope_text_equals_rope(self):
+        """Identical (t,h,w) streams -> M-RoPE == RoPE on text tokens."""
+        dh, theta = 16, 1e4
+        sections = (4, 2, 2)  # sums to dh//2
+        x = jax.random.normal(jax.random.PRNGKey(0), (2, 5, 3, dh))
+        pos = jnp.broadcast_to(jnp.arange(5), (2, 5))
+        a = apply_rope(x, pos, dh, theta)
+        b = apply_mrope(x, text_mrope_positions(pos), dh, theta, sections)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                                   atol=1e-5)
+
+    def test_mrope_streams_differ(self):
+        dh, sections = 16, (4, 2, 2)
+        x = jax.random.normal(jax.random.PRNGKey(0), (1, 4, 1, dh))
+        pos = jnp.broadcast_to(jnp.arange(4), (1, 4))
+        p3 = text_mrope_positions(pos)
+        p3b = p3.at[1].add(7)  # different h stream
+        a = apply_mrope(x, p3, dh, 1e4, sections)
+        b = apply_mrope(x, p3b, dh, 1e4, sections)
+        assert float(jnp.abs(a - b).max()) > 1e-3

@@ -1,0 +1,131 @@
+"""Pallas kernel validation: interpret-mode execution vs pure-jnp oracles,
+swept over shapes, dtypes, masks and block sizes (deliverable c)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.rmsnorm import rmsnorm
+
+TOLS = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+def rand(key, shape, dtype):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32).astype(
+        dtype
+    )
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize(
+        "B,H,K,Sq,Sk,dh,bq,bk",
+        [
+            (1, 4, 4, 32, 32, 16, 16, 16),     # MHA
+            (2, 8, 2, 48, 48, 32, 16, 16),     # GQA 4:1
+            (1, 4, 1, 40, 72, 16, 16, 32),     # MQA, Sq != Sk, ragged blocks
+            (1, 2, 2, 17, 33, 8, 16, 16),      # non-divisible padding
+        ],
+    )
+    def test_matches_ref(self, dtype, B, H, K, Sq, Sk, dh, bq, bk):
+        q = rand(0, (B, H, Sq, dh), dtype)
+        k = rand(1, (B, K, Sk, dh), dtype)
+        v = rand(2, (B, K, Sk, dh), dtype)
+        tol = TOLS[dtype]
+        for causal, window in [(True, 0), (True, 8), (False, 0)]:
+            if causal and Sq > Sk:
+                continue
+            o = flash_attention(
+                q, k, v, causal=causal, window=window,
+                block_q=bq, block_k=bk, interpret=True,
+            )
+            r = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+            np.testing.assert_allclose(
+                np.asarray(o, np.float32), np.asarray(r, np.float32),
+                rtol=tol, atol=tol,
+            )
+
+    def test_block_size_invariance(self):
+        q = rand(0, (1, 2, 64, 16), jnp.float32)
+        k = rand(1, (1, 2, 64, 16), jnp.float32)
+        v = rand(2, (1, 2, 64, 16), jnp.float32)
+        outs = [
+            flash_attention(q, k, v, block_q=b, block_k=b, interpret=True)
+            for b in (8, 16, 64)
+        ]
+        for o in outs[1:]:
+            np.testing.assert_allclose(
+                np.asarray(outs[0]), np.asarray(o), rtol=1e-5, atol=1e-5
+            )
+
+
+class TestDecodeAttention:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize(
+        "B,H,K,Sc,dh,bk", [(2, 4, 2, 64, 16, 16), (1, 8, 8, 70, 32, 32)]
+    )
+    def test_matches_ref(self, dtype, B, H, K, Sc, dh, bk):
+        q = rand(0, (B, H, dh), dtype)
+        k = rand(1, (B, K, Sc, dh), dtype)
+        v = rand(2, (B, K, Sc, dh), dtype)
+        kv_pos = jnp.broadcast_to(jnp.arange(Sc), (B, Sc)).astype(jnp.int32)
+        # some empty tail slots + per-seq positions
+        kv_pos = jnp.where(kv_pos < Sc - 7, kv_pos, -1)
+        pos = jnp.asarray([Sc - 8] * B, jnp.int32)
+        tol = TOLS[dtype]
+        for window in (0, 16):
+            o = decode_attention(
+                q, k, v, kv_pos, pos, window=window, block_k=bk, interpret=True
+            )
+            r = ref.decode_attention_ref(q, k, v, kv_pos, pos, window=window)
+            np.testing.assert_allclose(
+                np.asarray(o, np.float32), np.asarray(r, np.float32),
+                rtol=tol, atol=tol,
+            )
+
+    def test_ring_cache_semantics(self):
+        """Out-of-order absolute positions (ring buffer) mask correctly."""
+        B, H, K, Sc, dh = 1, 2, 2, 16, 8
+        q = rand(0, (B, H, dh), jnp.float32)
+        k = rand(1, (B, K, Sc, dh), jnp.float32)
+        v = rand(2, (B, K, Sc, dh), jnp.float32)
+        # ring: slot i holds absolute position (i + 16) for i < 4, else i
+        kv_pos = jnp.asarray(
+            [[16, 17, 18, 19, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13, 14, 15]],
+            jnp.int32,
+        )
+        pos = jnp.asarray([19], jnp.int32)
+        o = decode_attention(q, k, v, kv_pos, pos, window=8, block_k=8,
+                             interpret=True)
+        r = ref.decode_attention_ref(q, k, v, kv_pos, pos, window=8)
+        np.testing.assert_allclose(np.asarray(o), np.asarray(r), rtol=2e-5,
+                                   atol=2e-5)
+
+
+class TestRmsNorm:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("shape", [(8, 128), (3, 37, 64), (1, 256)])
+    def test_matches_ref(self, dtype, shape):
+        x = rand(3, shape, dtype)
+        g = 1.0 + 0.1 * rand(4, shape[-1:], jnp.float32)
+        o = rmsnorm(x, g, block_rows=16, interpret=True)
+        r = ref.rmsnorm_ref(x, g)
+        np.testing.assert_allclose(
+            np.asarray(o, np.float32), np.asarray(r, np.float32),
+            rtol=TOLS[dtype], atol=TOLS[dtype],
+        )
+
+    def test_model_layer_uses_same_math(self):
+        from repro.models.common import rms_norm
+
+        x = rand(5, (4, 64), jnp.float32)
+        g = 1.0 + 0.1 * rand(6, (64,), jnp.float32)
+        np.testing.assert_allclose(
+            np.asarray(rms_norm(x, g, 1e-5)),
+            np.asarray(ref.rmsnorm_ref(x, g, 1e-5)),
+            rtol=1e-6, atol=1e-6,
+        )

@@ -1,0 +1,76 @@
+"""LLM latency model (paper Eq. 7/8) + extended-fidelity properties."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.latency_model import (
+    A100,
+    GH200_NVL2,
+    LLAMA2_7B,
+    TPU_V5E,
+    HardwareSpec,
+    LatencyModel,
+    ModelProfile,
+)
+
+
+class TestPaperMode:
+    def test_prefill_eq7(self):
+        lm = LatencyModel(A100, LLAMA2_7B, fidelity="paper")
+        n_in = 15
+        c = n_in * 2 * 7e9
+        want = max(c / A100.flops, 7e9 * 2 / A100.hbm_bw)
+        assert lm.prefill_latency(n_in) == pytest.approx(want)
+
+    def test_decode_eq8(self):
+        lm = LatencyModel(A100, LLAMA2_7B, fidelity="paper")
+        per_tok = max(2 * 7e9 / A100.flops, 14e9 / A100.hbm_bw)
+        assert lm.decode_latency(15) == pytest.approx(15 * per_tok)
+
+    def test_llama2_on_a100_is_memory_bound_decode(self):
+        """Decode of a 7B FP16 on A100: memory term dominates (well known)."""
+        per_tok_mem = 14e9 / A100.hbm_bw
+        per_tok_comp = 14e9 / A100.flops
+        assert per_tok_mem > per_tok_comp
+
+    def test_gpu_scaling_increases_rate(self):
+        lm1 = LatencyModel(A100, LLAMA2_7B)
+        lm4 = LatencyModel(A100.scaled(4), LLAMA2_7B)
+        assert lm4.service_rate(15, 15) > 3.5 * lm1.service_rate(15, 15)
+
+
+class TestExtendedMode:
+    def test_kv_cache_grows_decode_latency(self):
+        lm = LatencyModel(TPU_V5E, LLAMA2_7B, fidelity="extended")
+        assert lm.decode_latency(1, context=100_000) > lm.decode_latency(
+            1, context=100
+        )
+
+    def test_paper_mode_ignores_context(self):
+        lm = LatencyModel(TPU_V5E, LLAMA2_7B, fidelity="paper")
+        assert lm.decode_latency(1, context=100_000) == lm.decode_latency(
+            1, context=100
+        )
+
+    def test_tp_collective_term_positive(self):
+        lm1 = LatencyModel(TPU_V5E, LLAMA2_7B, fidelity="extended", tp_degree=1)
+        lm8 = LatencyModel(TPU_V5E, LLAMA2_7B, fidelity="extended", tp_degree=8)
+        assert lm8.decode_latency(4) > lm1.decode_latency(4)
+
+    @given(n_in=st.integers(1, 512), n_out=st.integers(1, 128))
+    @settings(max_examples=30, deadline=None)
+    def test_latency_positive_and_additive(self, n_in, n_out):
+        lm = LatencyModel(GH200_NVL2, LLAMA2_7B, fidelity="extended")
+        t = lm.job_latency(n_in, n_out)
+        assert t > 0
+        assert t == pytest.approx(
+            lm.prefill_latency(n_in) + lm.decode_latency(n_out, context=n_in)
+        )
+
+    def test_moe_active_params(self):
+        moe = ModelProfile(
+            name="moe", n_params=100e9, n_active_params=20e9,
+            bytes_per_param=2, kv_bytes_per_token=1e5,
+        )
+        assert moe.flops_per_token == pytest.approx(2 * 20e9)
+        assert moe.model_bytes == pytest.approx(200e9)

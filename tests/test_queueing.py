@@ -1,0 +1,151 @@
+"""Queueing theory (paper §III): closed forms vs Monte-Carlo tandem queue,
+plus hypothesis properties of the satisfaction functions."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.queueing import (
+    ICCSystem,
+    disjoint_satisfaction,
+    exp_sum_cdf,
+    joint_satisfaction,
+    paper_fig4_setup,
+    service_capacity,
+)
+
+
+def simulate_tandem(mu1, mu2, t_wire, lam, n_jobs=60_000, seed=0):
+    """FCFS M/M/1 -> constant delay -> M/M/1; returns per-job (T1, T2)."""
+    rng = np.random.default_rng(seed)
+    arr = np.cumsum(rng.exponential(1 / lam, n_jobs))
+    s1 = rng.exponential(1 / mu1, n_jobs)
+    s2 = rng.exponential(1 / mu2, n_jobs)
+    dep1 = np.empty(n_jobs)
+    free = 0.0
+    for i in range(n_jobs):
+        start = max(arr[i], free)
+        dep1[i] = start + s1[i]
+        free = dep1[i]
+    arr2 = dep1 + t_wire
+    dep2 = np.empty(n_jobs)
+    free = 0.0
+    for i in range(n_jobs):
+        start = max(arr2[i], free)
+        dep2[i] = start + s2[i]
+        free = dep2[i]
+    return dep1 - arr, dep2 - arr2
+
+
+class TestExpSumCdf:
+    def test_known_value(self):
+        # a=1, b=2, t=1: 1 - (2e^-1 - e^-2)/(1) = 1 - 2e^-1 + e^-2
+        want = 1 - 2 * math.exp(-1) + math.exp(-2)
+        assert abs(exp_sum_cdf(1.0, 2.0, 1.0) - want) < 1e-12
+
+    def test_equal_rates_erlang(self):
+        # a == b -> Erlang-2: 1 - e^{-at}(1+at)
+        a, t = 3.0, 0.7
+        want = 1 - math.exp(-a * t) * (1 + a * t)
+        assert abs(exp_sum_cdf(a, a, t) - want) < 1e-9
+
+    @given(
+        a=st.floats(0.1, 1e3),
+        b=st.floats(0.1, 1e3),
+        t=st.floats(0.0, 10.0),
+    )
+    @settings(max_examples=200, deadline=None)
+    def test_is_cdf(self, a, b, t):
+        p = exp_sum_cdf(a, b, t)
+        assert 0.0 <= p <= 1.0
+        assert exp_sum_cdf(a, b, t + 0.1) >= p - 1e-9  # monotone in t
+
+    def test_near_equal_rates_stable(self):
+        # continuity across the a == b switch
+        a = 100.0
+        vals = [exp_sum_cdf(a, a * (1 + e), 0.01) for e in (0, 1e-10, 1e-7, 1e-4)]
+        assert max(vals) - min(vals) < 1e-4
+
+
+class TestAgainstMonteCarlo:
+    def test_joint_satisfaction_matches_simulation(self):
+        sys = ICCSystem(mu1=900.0, mu2=100.0, t_wireline=0.005)
+        lam, b_total = 60.0, 0.080
+        t1, t2 = simulate_tandem(sys.mu1, sys.mu2, sys.t_wireline, lam)
+        warm = slice(5000, None)
+        emp = np.mean(
+            (t1[warm] + t2[warm]) <= (b_total - sys.t_wireline)
+        )
+        assert abs(joint_satisfaction(sys, lam, b_total) - emp) < 0.01
+
+    def test_disjoint_satisfaction_matches_simulation(self):
+        sys = ICCSystem(mu1=900.0, mu2=100.0, t_wireline=0.005)
+        lam, b_total, b_comm, b_comp = 55.0, 0.080, 0.024, 0.056
+        t1, t2 = simulate_tandem(sys.mu1, sys.mu2, sys.t_wireline, lam, seed=1)
+        warm = slice(5000, None)
+        c = b_total - sys.t_wireline
+        emp = np.mean(
+            ((t1[warm] + t2[warm]) <= c)
+            & (t1[warm] <= b_comm - sys.t_wireline)
+            & (t2[warm] <= b_comp)
+        )
+        got = disjoint_satisfaction(sys, lam, b_total, b_comm, b_comp)
+        assert abs(got - emp) < 0.01
+
+    def test_sojourn_independence(self):
+        # Lemma 1: corr(T1, T2) ~ 0 in steady state
+        t1, t2 = simulate_tandem(900.0, 100.0, 0.005, 70.0, seed=2)
+        r = np.corrcoef(t1[5000:], t2[5000:])[0, 1]
+        assert abs(r) < 0.03
+
+
+class TestProperties:
+    @given(lam=st.floats(1.0, 95.0))
+    @settings(max_examples=50, deadline=None)
+    def test_joint_dominates_disjoint(self, lam):
+        """Joint management can only help (its success event is a superset)."""
+        sys = ICCSystem(mu1=900.0, mu2=100.0, t_wireline=0.005)
+        j = joint_satisfaction(sys, lam, 0.080)
+        d = disjoint_satisfaction(sys, lam, 0.080, 0.024, 0.056)
+        assert j >= d - 1e-12
+
+    @given(
+        lam1=st.floats(1.0, 90.0),
+        lam2=st.floats(1.0, 90.0),
+    )
+    @settings(max_examples=50, deadline=None)
+    def test_monotone_in_load(self, lam1, lam2):
+        sys = ICCSystem(mu1=900.0, mu2=100.0, t_wireline=0.005)
+        lo, hi = min(lam1, lam2), max(lam1, lam2)
+        assert joint_satisfaction(sys, lo, 0.080) >= joint_satisfaction(
+            sys, hi, 0.080
+        ) - 1e-12
+
+    def test_shorter_wireline_helps(self):
+        ran = ICCSystem(900.0, 100.0, 0.005)
+        mec = ICCSystem(900.0, 100.0, 0.020)
+        for lam in (10.0, 50.0, 80.0):
+            assert joint_satisfaction(ran, lam, 0.08) >= joint_satisfaction(
+                mec, lam, 0.08
+            )
+
+
+class TestServiceCapacity:
+    def test_bisection_consistent(self):
+        sys = ICCSystem(900.0, 100.0, 0.005)
+        fn = lambda lam: joint_satisfaction(sys, lam, 0.080)
+        cap = service_capacity(fn, mu_max=100.0, alpha=0.95)
+        assert fn(cap - 0.5) >= 0.95 >= fn(cap + 0.5)
+
+    def test_paper_fig4_98_percent_claim(self):
+        """§III-B: joint@RAN vs disjoint@MEC capacity gain ≈ 98 %."""
+        schemes = paper_fig4_setup()
+        caps = {
+            name: service_capacity(fn, mu_max=100.0, alpha=0.95)
+            for name, (sys, fn) in schemes.items()
+        }
+        gain = caps["joint_ran"] / caps["disjoint_mec"] - 1.0
+        assert caps["joint_ran"] > caps["disjoint_ran"] > caps["disjoint_mec"]
+        assert 0.80 <= gain <= 1.20, f"gain {gain:.2%} not ~98%"

@@ -1,0 +1,88 @@
+"""Compute-node scheduler (paper §IV-B): priority vs FIFO, drops."""
+
+import math
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core.scheduler import ComputeNode, Job
+
+
+def mk_job(uid, t_gen, t_arr, b_total=0.08, n=15):
+    j = Job(uid=uid, ue=0, t_gen=t_gen, n_input=n, n_output=n, b_total=b_total)
+    j.t_compute_arrival = t_arr
+    return j
+
+
+class TestFifo:
+    def test_serves_in_arrival_order(self):
+        node = ComputeNode(lambda j: 0.01, policy="fifo")
+        for i in range(5):
+            node.submit(mk_job(i, 0.0, 0.01 * i))
+        node.run_until(math.inf)
+        assert [j.uid for j in node.completed] == list(range(5))
+
+    def test_non_preemptive_busy_server(self):
+        node = ComputeNode(lambda j: 1.0, policy="fifo")
+        node.submit(mk_job(0, 0.0, 0.0, b_total=10))
+        node.run_until(0.0)  # starts job 0 until t=1
+        node.submit(mk_job(1, 0.0, 0.1, b_total=10))
+        node.run_until(math.inf)
+        assert node.completed[1].t_complete >= 2.0  # waited for the server
+
+
+class TestPriority:
+    def test_least_slack_first(self):
+        node = ComputeNode(lambda j: 0.01, policy="priority")
+        # same t_gen; larger comm latency => smaller slack => first
+        slow = mk_job(0, 0.0, 0.050)
+        fast = mk_job(1, 0.0, 0.005)
+        # both present before server dispatches
+        node.submit(fast)
+        node.submit(slow)
+        node.busy_until = 0.06  # release after both queued
+        node.run_until(0.06)
+        assert node.completed[0].uid == 0  # slow job (less slack) first
+
+    def test_priority_formula(self):
+        j = mk_job(0, 1.0, 1.03, b_total=0.08)
+        assert j.priority == 1.0 + 0.08 - 0.03
+        assert j.deadline == 1.08
+
+    def test_infeasible_dropped(self):
+        node = ComputeNode(lambda j: 1.0, policy="priority", drop_infeasible=True)
+        node.submit(mk_job(0, 0.0, 0.01, b_total=0.08))  # 1s job, 80ms budget
+        node.run_until(math.inf)
+        assert len(node.dropped) == 1 and not node.completed
+
+    def test_disjoint_comp_budget_drop(self):
+        node = ComputeNode(
+            lambda j: 0.06, policy="fifo", drop_infeasible=True, comp_budget=0.056
+        )
+        node.submit(mk_job(0, 0.0, 0.01, b_total=1.0))  # fits e2e, not b_comp
+        node.run_until(math.inf)
+        assert len(node.dropped) == 1
+
+
+class TestProperties:
+    @given(
+        arrivals=st.lists(
+            st.tuples(st.floats(0, 1), st.floats(0.0, 0.05)),
+            min_size=1,
+            max_size=30,
+        ),
+        policy=st.sampled_from(["fifo", "priority"]),
+    )
+    @settings(max_examples=50, deadline=None)
+    def test_server_invariants(self, arrivals, policy):
+        node = ComputeNode(lambda j: 0.01, policy=policy)
+        for i, (tg, dc) in enumerate(sorted(arrivals)):
+            node.submit(mk_job(i, tg, tg + dc, b_total=100.0))
+        node.run_until(math.inf)
+        assert len(node.completed) == len(arrivals)
+        ends = [j.t_complete for j in node.completed]
+        starts = [j.t_complete - 0.01 for j in node.completed]
+        # no job starts before its arrival; single server never overlaps
+        for j, s in zip(node.completed, starts):
+            assert s >= j.t_compute_arrival - 1e-12
+        for e, s_next in zip(ends, starts[1:]):
+            assert s_next >= e - 1e-12

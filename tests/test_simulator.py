@@ -1,0 +1,120 @@
+"""System-level simulator (paper §IV) + channel behaviour."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.channel import ChannelConfig, UplinkChannel
+from repro.core.latency_model import GH200_NVL2, LLAMA2_7B, LatencyModel
+from repro.core.simulator import SCHEMES, SimConfig, simulate
+from repro.core.capacity import capacity_from_sweep, sweep
+
+
+def svc():
+    return lambda job: LatencyModel(GH200_NVL2, LLAMA2_7B).job_latency(
+        job.n_input, job.n_output
+    )
+
+
+class TestChannel:
+    def test_latency_grows_with_load(self):
+        cfg = ChannelConfig()
+        lat = {}
+        for n_ues in (10, 120):
+            rng = np.random.default_rng(0)
+            ch = UplinkChannel(cfg, n_ues, rng)
+            slots_to_drain = []
+            for trial in range(40):
+                ue = trial % n_ues
+                ch.add_job_bits(ue, 15 * cfg.bytes_per_token * 8, trial * 0.01)
+                n = 0
+                now = trial * 0.01
+                while ch.job_bits[ue] > 0 and n < 4000:
+                    ch.add_background(now)
+                    ch.step(now, prioritize_jobs=False)
+                    now += cfg.slot_s
+                    n += 1
+                slots_to_drain.append(n)
+            lat[n_ues] = np.mean(slots_to_drain)
+        assert lat[120] > lat[10]
+
+    def test_priority_beats_fifo_for_jobs(self):
+        cfg = ChannelConfig()
+        drain = {}
+        for prio in (True, False):
+            rng = np.random.default_rng(1)
+            ch = UplinkChannel(cfg, 80, rng)
+            now = 0.0
+            # build up background backlog
+            for _ in range(200):
+                ch.add_background(now)
+                ch.step(now, prioritize_jobs=prio)
+                now += cfg.slot_s
+            ch.add_job_bits(3, 15 * cfg.bytes_per_token * 8, now)
+            n = 0
+            while ch.job_bits[3] > 0 and n < 4000:
+                ch.add_background(now)
+                ch.step(now, prioritize_jobs=prio)
+                now += cfg.slot_s
+                n += 1
+            drain[prio] = n
+        assert drain[True] <= drain[False]
+
+
+class TestSimulator:
+    @pytest.fixture(scope="class")
+    def results(self):
+        out = {}
+        for name, scheme in SCHEMES.items():
+            out[name] = simulate(
+                scheme, SimConfig(n_ues=40, sim_time=12.0, seed=7), svc()
+            )
+        return out
+
+    def test_deterministic(self):
+        cfgs = SimConfig(n_ues=20, sim_time=6.0, seed=3)
+        a = simulate(SCHEMES["icc"], cfgs, svc())
+        b = simulate(SCHEMES["icc"], cfgs, svc())
+        assert a == b
+
+    def test_all_schemes_complete_jobs(self, results):
+        for name, r in results.items():
+            assert r.n_jobs > 100, name
+            assert 0.0 <= r.satisfaction <= 1.0
+
+    def test_icc_beats_mec_at_moderate_load(self, results):
+        assert results["icc"].satisfaction >= results["disjoint_mec"].satisfaction
+
+    def test_e2e_decomposition(self, results):
+        r = results["icc"]
+        assert r.avg_e2e == pytest.approx(r.avg_comm + r.avg_comp, rel=0.05)
+
+    def test_wireline_adds_latency(self):
+        base = SimConfig(n_ues=10, sim_time=8.0, seed=5)
+        ran = simulate(SCHEMES["disjoint_ran"], base, svc())
+        mec = simulate(SCHEMES["disjoint_mec"], base, svc())
+        # 15 ms extra wireline shows up in comm latency
+        assert mec.avg_comm > ran.avg_comm + 0.010
+
+
+class TestCapacity:
+    def test_capacity_interpolation(self):
+        rates = [10.0, 20.0, 30.0]
+        mk = lambda s: dataclasses.replace(
+            simulate(
+                SCHEMES["icc"], SimConfig(n_ues=5, sim_time=3.0), svc()
+            ),
+            satisfaction=s,
+        )
+        results = [mk(1.0), mk(0.97), mk(0.50)]
+        cap = capacity_from_sweep(rates, results, alpha=0.95)
+        assert 20.0 < cap < 30.0
+
+    def test_capacity_zero_if_never_satisfied(self):
+        rates = [10.0]
+        mk = lambda s: dataclasses.replace(
+            simulate(SCHEMES["icc"], SimConfig(n_ues=2, sim_time=2.0), svc()),
+            satisfaction=s,
+        )
+        assert capacity_from_sweep(rates, [mk(0.2)], alpha=0.95) == 0.0
