@@ -37,6 +37,29 @@ def main() -> None:
                  r6["schemes"]["disjoint_mec"]["capacity"], "paper: 50/s"))
     rows.append(("fig6.gain_icc_vs_mec", r6["gain_icc_vs_mec"], "paper: +0.60"))
 
+    from . import network_capacity
+
+    # reduced sweep: keep the full-fidelity outputs of
+    # `python -m benchmarks.network_capacity` (tracked BENCH_network.json
+    # baseline + results/network_capacity.json) intact.
+    rn = network_capacity.run(rates=[40, 80, 120], sim_time=5.0, n_seeds=1,
+                              scenario_loads={},
+                              results_name="network_capacity_quick.json",
+                              bench_path="benchmarks/results/BENCH_network_quick.json")
+    for pol, res in sorted(rn["policies"].items()):
+        note = "3-cell hetero fleet, jobs/s @ 95%"
+        if res["saturated"]:
+            note += " (>=: curve never crossed alpha in this reduced range)"
+        rows.append((f"network.capacity_{pol}", res["capacity"], note))
+    gain_note = "routing beats centralized MEC"
+    if rn["policies"]["mec_only"]["saturated"]:
+        # denominator capped too: the ratio is indeterminate, not a bound
+        gain_note += " (indeterminate: mec_only saturated the reduced range)"
+    elif rn["policies"]["slack_aware"]["saturated"]:
+        gain_note += " (lower bound: slack_aware saturated the reduced range)"
+    rows.append(("network.gain_slack_vs_mec", round(rn["gain_slack_vs_mec"], 3),
+                 gain_note))
+
     r7 = fig7_gpu_scaling.run(gpu_counts=range(4, 15, 2), sim_time=15.0,
                               n_seeds=2)
     rows.append(("fig7.min_gpus_icc", r7["min_gpus"].get("icc"), "paper: 8"))

@@ -1,0 +1,58 @@
+"""Multi-cell ICC study: routing policies over a heterogeneous edge fleet.
+
+The paper's Fig. 6 asks how many prompts/s ONE cell's compute can serve
+within the 80 ms budget. At network scale the question changes: three gNB
+sites with unequal compute (2xH100, one GH200, one compute-less small cell)
+share a pooled GH200 MEC tier, and the routing policy decides where each
+job runs. This study:
+
+  1. enumerates the workload scenario registry (Table-I AR translation,
+     chatbot, vision-prompt) at a fixed load, per policy;
+  2. sweeps aggregate load on the AR-translation workload and reads off
+     Def.-2 service capacity per policy — showing slack-aware routing
+     (the ICC-native policy) beats both tiled-local and centralized-MEC.
+
+Run:  PYTHONPATH=src python examples/multicell_study.py
+"""
+
+from repro.core.capacity import capacity_from_sweep, network_sweep
+from repro.network import (
+    POLICIES,
+    SCENARIOS,
+    config_for_load,
+    simulate_network,
+    three_cell_hetero,
+)
+
+TOPO = three_cell_hetero()
+POLICY_ORDER = ["local_only", "mec_only", "least_loaded", "slack_aware"]
+
+print("=== 1. Scenario registry x routing policies (fixed load) ===")
+print("deployment: cell0=2xH100, cell1=GH200, cell2=no RAN node, MEC=2xGH200")
+loads = {"ar_translation": 45.0, "chatbot": 20.0, "vision_prompt": 15.0}
+for name, load in loads.items():
+    sc = SCENARIOS[name]
+    cfg = config_for_load(TOPO, sc, load, sim_time=5.0, warmup=1.0)
+    print(f"\n{name} ({sc.n_input} in / {sc.n_output} out, "
+          f"{sc.b_total*1e3:.0f} ms budget) @ {load:.0f} jobs/s:")
+    for policy in POLICY_ORDER:
+        r = simulate_network(cfg, policy)
+        print(f"  {r.row()}")
+
+print("\n=== 2. Service capacity per policy (AR translation, Def. 2) ===")
+rates = [30, 50, 70, 90, 110, 130]
+caps = {}
+for policy in POLICY_ORDER:
+    curve = network_sweep(TOPO, policy, rates, sim_time=5.0, warmup=1.0,
+                          n_seeds=2)
+    caps[policy] = capacity_from_sweep(rates, curve)
+    bar = "#" * int(caps[policy] / 2)
+    print(f"  {policy:13s} {caps[policy]:6.1f} jobs/s  {bar}")
+
+assert caps["slack_aware"] >= caps["local_only"], "slack_aware < local_only"
+assert caps["slack_aware"] >= caps["mec_only"], "slack_aware < mec_only"
+print(f"\nslack-aware routing: {caps['slack_aware']:.0f} jobs/s "
+      f"(+{caps['slack_aware']/max(caps['mec_only'],1e-9)-1:.0%} over "
+      f"centralized MEC, +{caps['slack_aware']/max(caps['local_only'],1e-9)-1:.0%} "
+      f"over tiled single-cell ICC) — offloading between RAN nodes and the "
+      f"MEC tier is where the network-scale capacity lives.")

@@ -16,7 +16,7 @@ import numpy as np
 from .scheduler import Job
 from .simulator import SchemeConfig, SimConfig, SimResult, simulate
 
-__all__ = ["sweep", "capacity_from_sweep"]
+__all__ = ["sweep", "sweep_generic", "network_sweep", "capacity_from_sweep"]
 
 
 def sweep(
@@ -55,6 +55,56 @@ def sweep(
     return out
 
 
+def sweep_generic(
+    arrival_rates: Sequence[float],
+    run_one: Callable[[float, int], object],
+    n_seeds: int = 3,
+) -> List[float]:
+    """Seed-averaged satisfaction curve for any simulator.
+
+    `run_one(rate, seed_index)` returns anything with a `.satisfaction`
+    attribute (SimResult, NetResult, ...). This is the load-sweep skeleton
+    shared by the single-cell and network simulators.
+    """
+    curve = []
+    for lam in arrival_rates:
+        sats = [run_one(lam, s).satisfaction for s in range(n_seeds)]
+        curve.append(float(np.mean(sats)))
+    return curve
+
+
+def network_sweep(
+    topology,
+    policy: str,
+    arrival_rates: Sequence[float],
+    scenario=None,
+    sim_time: float = 10.0,
+    warmup: float = 2.0,
+    n_seeds: int = 2,
+    base_seed: int = 0,
+) -> List[float]:
+    """Network-level satisfaction curve for one routing policy.
+
+    `arrival_rates` are aggregate jobs/s across the whole deployment; the
+    UE population is rescaled per rate and redistributed across sites in
+    proportion to the topology's configured populations. Returns the
+    seed-averaged satisfaction per rate (feed to `capacity_from_sweep`).
+    """
+    from ..network.scenarios import SCENARIOS
+    from ..network.simulator import config_for_load, simulate_network
+
+    scenario = scenario or SCENARIOS["ar_translation"]
+
+    def run_one(lam: float, seed_idx: int):
+        cfg = config_for_load(
+            topology, scenario, lam, sim_time=sim_time, warmup=warmup,
+            seed=base_seed + 1000 * seed_idx,
+        )
+        return simulate_network(cfg, policy)
+
+    return sweep_generic(arrival_rates, run_one, n_seeds=n_seeds)
+
+
 def capacity_from_sweep(
     arrival_rates: Sequence[float],
     results: Sequence[SimResult],
@@ -63,19 +113,24 @@ def capacity_from_sweep(
     """lambda* = largest arrival rate whose satisfaction >= alpha.
 
     Linear interpolation on the first crossing below alpha (the curves are
-    monotone-decreasing up to simulation noise).
+    monotone-decreasing up to simulation noise). `results` entries may be
+    SimResult-like objects or bare satisfaction floats.
     """
+    sats = [
+        r.satisfaction if hasattr(r, "satisfaction") else float(r)
+        for r in results
+    ]
     lam_prev, sat_prev = 0.0, None
     cap = 0.0
-    for lam, res in zip(arrival_rates, results):
-        if res.satisfaction >= alpha:
+    for lam, sat in zip(arrival_rates, sats):
+        if sat >= alpha:
             cap = lam
-            lam_prev, sat_prev = lam, res.satisfaction
+            lam_prev, sat_prev = lam, sat
         else:
             # interpolate only from a measured satisfied point; if even the
             # first rate misses alpha we conservatively report 0.
             if sat_prev is not None and sat_prev > alpha:
-                frac = (sat_prev - alpha) / max(sat_prev - res.satisfaction, 1e-12)
+                frac = (sat_prev - alpha) / max(sat_prev - sat, 1e-12)
                 cap = lam_prev + frac * (lam - lam_prev)
             break
     return cap

@@ -39,6 +39,8 @@ class Job:
     n_output: int
     b_total: float  # end-to-end latency budget
     bits: float = 0.0  # uplink payload
+    cell: int = 0  # originating gNB site (multi-cell topologies)
+    route: str = ""  # compute node the router chose ("" = single-node sim)
     # filled in as the job moves through the system
     t_compute_arrival: float = float("nan")  # arrival at compute queue
     t_complete: float = float("nan")
@@ -86,6 +88,26 @@ class ComputeNode:
 
     def __len__(self) -> int:
         return len(self._heap)
+
+    def pending_jobs(self) -> List[Job]:
+        """Jobs queued but not yet dispatched (undefined order)."""
+        return [job for _, _, job in self._heap]
+
+    def estimated_free_at(self, now: float) -> float:
+        """Earliest time the server could start a job arriving now: the
+        in-service job's finish plus the predicted service of everything
+        queued ahead. Routing policies use this; it is an estimate (the
+        queue may reorder under `priority`, drops may shorten it).
+
+        Requires a *deterministic* `service_time` (e.g. an analytic
+        LatencyModel): each query re-invokes it per queued job, so a
+        stochastic sampler would both consume extra RNG draws (shifting
+        dispatch-time results) and return noise. Keep stochastic-service
+        nodes out of load-predictive routing."""
+        t = max(self.busy_until, now)
+        for job in self.pending_jobs():
+            t += self.service_time(job)
+        return t
 
     def submit(self, job: Job) -> None:
         key = job.t_compute_arrival if self.policy == "fifo" else job.priority

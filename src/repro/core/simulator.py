@@ -7,6 +7,12 @@ Pipeline per job (real-time translation on AR glasses, Table I):
     -> wireline hop gNB -> computing node          (constant, 5 or 20 ms)
     -> compute queue + LLM inference               (scheduler.ComputeNode)
 
+The per-slot pipeline (arrivals -> uplink -> wireline hand-off) lives in
+`SlotEngine`, one instance per cell. The single-cell `simulate()` below is
+a thin wrapper: one SlotEngine feeding one ComputeNode. The multi-cell
+deployment (`repro.network`) instantiates one SlotEngine per gNB site and
+routes wireline deliveries across a heterogeneous compute fleet.
+
 Schemes (paper §III-B / §IV-C):
 
   * ``icc``           joint mgmt, RAN node (5 ms), packet priority,
@@ -23,8 +29,9 @@ Satisfaction (Def. 1): joint   -> T_E2E <= b_total;
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import math
-from typing import Callable, Dict, List, Literal, Optional
+from typing import Callable, Dict, Iterator, List, Literal, Optional
 
 import numpy as np
 
@@ -32,7 +39,15 @@ from .channel import ChannelConfig, UplinkChannel
 from .latency_model import LatencyModel
 from .scheduler import ComputeNode, Job
 
-__all__ = ["SchemeConfig", "SimConfig", "SimResult", "SCHEMES", "simulate"]
+__all__ = [
+    "SchemeConfig",
+    "SimConfig",
+    "SimResult",
+    "SCHEMES",
+    "SlotEngine",
+    "score_jobs",
+    "simulate",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -94,92 +109,123 @@ class SimResult:
         )
 
 
-def simulate(
-    scheme: SchemeConfig,
-    sim: SimConfig,
-    service_time: Callable[[Job], float],
-) -> SimResult:
-    """Run one slot-stepped simulation and score Def.-1 satisfaction.
+class SlotEngine:
+    """One cell's slot-stepped pipeline: UE arrivals -> uplink -> wireline.
 
-    `service_time(job)` is the LLM inference latency model — analytic
-    (core.latency_model), measured (serving engine calibration), or random
-    (queueing-theory cross-check).
+    Owns the Poisson job generator, the per-UE burst queues, the uplink
+    channel, and the wireline pipe. Compute is pluggable:
+
+      * ``wireline(job, t_uplink_done)`` is called the instant a job's last
+        uplink bit lands at the gNB and returns the gNB -> compute-node
+        latency for that job. A multi-cell router makes its offload decision
+        here (tagging ``job.route``) since this is where the gNB first owns
+        the job.
+      * ``deliver(job)`` is called once the wireline hop completes
+        (``job.t_compute_arrival`` is already set); typically
+        ``ComputeNode.submit``.
+
+    The caller drives time: ``step(s)`` advances one slot and returns the
+    slot-end timestamp, after which the caller runs its compute node(s) up
+    to that time. This keeps compute ordering identical whether one engine
+    feeds one node (single cell) or many engines share a fleet.
     """
-    rng = np.random.default_rng(sim.seed)
-    ch = UplinkChannel(sim.channel, sim.n_ues, rng)
-    node = ComputeNode(
-        service_time,
-        policy=scheme.compute_policy,
-        drop_infeasible=scheme.drop_infeasible,
-        comp_budget=scheme.b_comp if scheme.management == "disjoint" else None,
-    )
 
-    slot = sim.channel.slot_s
-    n_slots = int(math.ceil(sim.sim_time / slot))
-    bits_per_job = sim.n_input * sim.channel.bytes_per_token * 8.0
+    def __init__(
+        self,
+        sim: SimConfig,
+        rng: np.random.Generator,
+        packet_priority: bool,
+        wireline: Callable[[Job, float], float],
+        deliver: Callable[[Job], None],
+        cell: int = 0,
+        uid_iter: Optional[Iterator[int]] = None,
+    ):
+        self.sim = sim
+        self.rng = rng
+        self.packet_priority = packet_priority
+        self.wireline = wireline
+        self.deliver = deliver
+        self.cell = cell
+        self.uid_iter = uid_iter if uid_iter is not None else itertools.count()
+        self.channel = UplinkChannel(sim.channel, sim.n_ues, rng)
+        self.slot = sim.channel.slot_s
+        self.n_slots = int(math.ceil(sim.sim_time / self.slot))
+        self.bits_per_job = sim.n_input * sim.channel.bytes_per_token * 8.0
+        self._lam_slot = sim.lam_per_ue * self.slot
+        # per-UE FIFO of (job, remaining_bits) bursts awaiting uplink
+        self._in_flight: Dict[int, List[List]] = {u: [] for u in range(sim.n_ues)}
+        self.jobs: List[Job] = []
+        self._wire_queue: List[Job] = []  # jobs in the wireline pipe
 
-    # Pre-draw Poisson arrival counts per (slot, ue) lazily per slot.
-    lam_slot = sim.lam_per_ue * slot
-    uid = 0
-    # per-UE FIFO of (job, remaining_bits) bursts awaiting uplink
-    in_flight: Dict[int, List[List]] = {u: [] for u in range(sim.n_ues)}
-    jobs: List[Job] = []
-    wire_queue: List[Job] = []  # jobs in the wireline pipe, sorted by arrival
-
-    for s in range(n_slots):
-        now = s * slot
+    def step(self, s: int) -> float:
+        """Advance one slot (index `s`); returns the slot-end time."""
+        sim, ch = self.sim, self.channel
+        now = s * self.slot
         # 1. arrivals at UEs
-        counts = rng.poisson(lam_slot, sim.n_ues)
+        counts = self.rng.poisson(self._lam_slot, sim.n_ues)
         for ue in np.nonzero(counts)[0]:
             for _ in range(int(counts[ue])):
-                j = Job(uid, int(ue), now, sim.n_input, sim.n_output, sim.b_total,
-                        bits=bits_per_job)
-                uid += 1
-                jobs.append(j)
-                in_flight[int(ue)].append([j, j.bits])
+                j = Job(next(self.uid_iter), int(ue), now, sim.n_input,
+                        sim.n_output, sim.b_total, bits=self.bits_per_job,
+                        cell=self.cell)
+                self.jobs.append(j)
+                self._in_flight[int(ue)].append([j, j.bits])
                 ch.add_job_bits(int(ue), j.bits, now)
         ch.add_background(now)
 
         # 2. one slot of uplink
-        drained = ch.step(now, prioritize_jobs=scheme.packet_priority)
-        t_slot_end = now + slot
+        drained = ch.step(now, prioritize_jobs=self.packet_priority)
+        t_slot_end = now + self.slot
         for ue in np.nonzero(drained > 0)[0]:
             ue = int(ue)
             bits = float(drained[ue])
             # complete jobs FIFO within the UE's burst queue
-            while bits > 1e-9 and in_flight[ue]:
-                entry = in_flight[ue][0]
+            while bits > 1e-9 and self._in_flight[ue]:
+                entry = self._in_flight[ue][0]
                 use = min(bits, entry[1])
                 entry[1] -= use
                 bits -= use
                 if entry[1] <= 1e-9:
-                    in_flight[ue].pop(0)
+                    self._in_flight[ue].pop(0)
                     j = entry[0]
-                    j.t_compute_arrival = t_slot_end + scheme.t_wireline
-                    wire_queue.append(j)
+                    j.t_compute_arrival = t_slot_end + self.wireline(j, t_slot_end)
+                    self._wire_queue.append(j)
                 else:
                     break
 
-        # 3. hand over wireline deliveries, run the compute node
+        # 3. hand over due wireline deliveries
         still = []
-        for j in wire_queue:
+        for j in self._wire_queue:
             if j.t_compute_arrival <= t_slot_end:
-                node.submit(j)
+                self.deliver(j)
             else:
                 still.append(j)
-        wire_queue = still
-        node.run_until(t_slot_end)
+        self._wire_queue = still
+        return t_slot_end
 
-    node.run_until(float("inf"))
 
-    # ------------------------------------------------------------- scoring
+def score_jobs(
+    jobs: List[Job],
+    sim: SimConfig,
+    name: str,
+    management: Literal["joint", "disjoint"] = "joint",
+    b_comm: Optional[float] = None,
+    b_comp: Optional[float] = None,
+) -> SimResult:
+    """Def.-1 satisfaction scoring over the warmup-trimmed job set.
+
+    Disjoint management needs the stage sub-budgets (take them from the
+    SchemeConfig — they are not defaulted here to avoid a second copy of
+    the §III-B split); joint management ignores them."""
+    if management == "disjoint" and (b_comm is None or b_comp is None):
+        raise ValueError("disjoint scoring requires b_comm and b_comp")
     scored = [
         j for j in jobs
         if sim.warmup <= j.t_gen <= sim.sim_time - 2 * sim.b_total
     ]
     n = len(scored)
     if n == 0:
-        return SimResult(scheme.name, 0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0)
+        return SimResult(name, 0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0)
 
     sat = 0
     comm, comp, e2e, tps = [], [], [], []
@@ -192,18 +238,18 @@ def simulate(
         comp.append(t_comp)
         e2e.append(j.e2e)
         tps.append((j.n_input + j.n_output) / j.e2e)
-        if scheme.management == "joint":
+        if management == "joint":
             ok = j.e2e <= j.b_total
         else:
             ok = (
                 j.e2e <= j.b_total
-                and t_comm <= scheme.b_comm
-                and t_comp <= scheme.b_comp
+                and t_comm <= b_comm
+                and t_comp <= b_comp
             )
         sat += int(ok)
     n_dropped = sum(1 for j in scored if j.dropped or math.isnan(j.t_complete))
     return SimResult(
-        scheme=scheme.name,
+        scheme=name,
         n_jobs=n,
         satisfaction=sat / n,
         drop_rate=n_dropped / n,
@@ -211,4 +257,43 @@ def simulate(
         avg_comp=float(np.mean(comp)) if comp else float("nan"),
         avg_e2e=float(np.mean(e2e)) if e2e else float("nan"),
         avg_tokens_per_s=float(np.mean(tps)) if tps else float("nan"),
+    )
+
+
+def simulate(
+    scheme: SchemeConfig,
+    sim: SimConfig,
+    service_time: Callable[[Job], float],
+) -> SimResult:
+    """Run one slot-stepped simulation and score Def.-1 satisfaction.
+
+    `service_time(job)` is the LLM inference latency model — analytic
+    (core.latency_model), measured (serving engine calibration), or random
+    (queueing-theory cross-check).
+    """
+    rng = np.random.default_rng(sim.seed)
+    node = ComputeNode(
+        service_time,
+        policy=scheme.compute_policy,
+        drop_infeasible=scheme.drop_infeasible,
+        comp_budget=scheme.b_comp if scheme.management == "disjoint" else None,
+    )
+    engine = SlotEngine(
+        sim,
+        rng,
+        packet_priority=scheme.packet_priority,
+        wireline=lambda job, t: scheme.t_wireline,
+        deliver=node.submit,
+    )
+    for s in range(engine.n_slots):
+        t_slot_end = engine.step(s)
+        node.run_until(t_slot_end)
+    node.run_until(float("inf"))
+    return score_jobs(
+        engine.jobs,
+        sim,
+        scheme.name,
+        management=scheme.management,
+        b_comm=scheme.b_comm,
+        b_comp=scheme.b_comp,
     )

@@ -1,0 +1,103 @@
+"""Job routing / offloading policies for the multi-cell deployment.
+
+A policy is consulted by each site's `SlotEngine` at the instant a job's
+last uplink bit lands at the gNB (that is where the RAN first owns the job,
+paper Fig. 5), and names the fleet node that will serve it. Policies:
+
+  * ``local_only``    the site's own RAN node (MEC if the site has none):
+                      the paper's single-cell ICC deployment, tiled.
+  * ``mec_only``      everything to the shared MEC tier: the centralized
+                      5G-MEC baseline at network scale.
+  * ``least_loaded``  the candidate with the shortest queue (ties prefer
+                      cheaper wireline, since candidates are ordered
+                      local -> remote RAN -> MEC).
+  * ``slack_aware``   the ICC-native policy: predict each candidate's
+                      completion (backhaul arrival + queue drain + service,
+                      via the node's own LatencyModel) and keep the job
+                      local whenever the local node meets the deadline;
+                      otherwise offload to the earliest-finishing node,
+                      preferring deadline-feasible ones.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Type, Union
+
+from ..core.scheduler import Job
+from .topology import Topology
+
+__all__ = ["RoutingPolicy", "POLICIES", "get_policy"]
+
+
+class RoutingPolicy:
+    name = "base"
+
+    def __init__(self) -> None:
+        self.topo: Topology = None  # set by bind()
+
+    def bind(self, topo: Topology) -> "RoutingPolicy":
+        self.topo = topo
+        return self
+
+    def route(self, job: Job, site: int, now: float) -> str:
+        """Return the fleet-node name that will serve `job` from `site`."""
+        raise NotImplementedError
+
+
+class LocalOnly(RoutingPolicy):
+    name = "local_only"
+
+    def route(self, job: Job, site: int, now: float) -> str:
+        return self.topo.local_node(site)
+
+
+class MecOnly(RoutingPolicy):
+    name = "mec_only"
+
+    def route(self, job: Job, site: int, now: float) -> str:
+        return Topology.MEC
+
+
+class LeastLoaded(RoutingPolicy):
+    name = "least_loaded"
+
+    def route(self, job: Job, site: int, now: float) -> str:
+        def depth(name: str) -> int:
+            fn = self.topo.nodes[name]
+            return len(fn.node) + fn.in_transit + int(fn.node.busy_until > now)
+
+        return min(self.topo.candidates(site), key=depth)
+
+
+class SlackAware(RoutingPolicy):
+    name = "slack_aware"
+
+    def route(self, job: Job, site: int, now: float) -> str:
+        topo = self.topo
+        finish: Dict[str, float] = {}
+        for name in topo.candidates(site):
+            arrival = now + topo.wireline_latency(site, name)
+            finish[name] = topo.nodes[name].predict_finish(job, arrival, now)
+
+        local = topo.local_node(site)
+        if finish[local] <= job.deadline:
+            return local  # keep RAN-resident whenever the deadline holds
+        feasible = {n: f for n, f in finish.items() if f <= job.deadline}
+        pool = feasible or finish
+        return min(pool, key=pool.get)
+
+
+POLICIES: Dict[str, Type[RoutingPolicy]] = {
+    p.name: p for p in (LocalOnly, MecOnly, LeastLoaded, SlackAware)
+}
+
+
+def get_policy(policy: Union[str, RoutingPolicy]) -> RoutingPolicy:
+    if isinstance(policy, RoutingPolicy):
+        return policy
+    try:
+        return POLICIES[policy]()
+    except KeyError:
+        raise KeyError(
+            f"unknown routing policy {policy!r}; known: {sorted(POLICIES)}"
+        ) from None

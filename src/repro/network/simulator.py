@@ -1,0 +1,160 @@
+"""Multi-cell slot-stepped simulation (Fig. 5 pipeline, N cells, one fleet).
+
+Each gNB site runs its own `SlotEngine` (own UE population, own uplink
+channel, own Poisson stream); the routing policy is consulted as each job
+clears the air interface, the job rides the chosen wireline/backhaul link,
+and the whole fleet of compute nodes advances in lock-step with the slot
+clock. Satisfaction is the paper's Def. 1 under joint management (the
+network layer is ICC-native: one operator owns RAN + compute).
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import itertools
+from typing import Dict, List, Union
+
+import numpy as np
+
+from ..core.latency_model import LLAMA2_7B, ModelProfile
+from ..core.scheduler import Job
+from ..core.simulator import SimConfig, SimResult, SlotEngine, score_jobs
+from .routing import RoutingPolicy, get_policy
+from .scenarios import SCENARIOS, Scenario
+from .topology import Topology, TopologyConfig
+
+__all__ = ["NetSimConfig", "NetResult", "config_for_load", "simulate_network"]
+
+
+@dataclasses.dataclass(frozen=True)
+class NetSimConfig:
+    topology: TopologyConfig
+    scenario: Scenario = SCENARIOS["ar_translation"]
+    model: ModelProfile = LLAMA2_7B
+    sim_time: float = 10.0
+    warmup: float = 2.0
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class NetResult:
+    policy: str
+    total: SimResult  # Def.-1 scoring over every cell's jobs
+    per_cell: Dict[str, SimResult]  # keyed by site name
+    route_share: Dict[str, float]  # fraction of routed jobs per fleet node
+
+    @property
+    def satisfaction(self) -> float:
+        return self.total.satisfaction
+
+    @property
+    def n_jobs(self) -> int:
+        return self.total.n_jobs
+
+    def row(self) -> str:
+        share = " ".join(
+            f"{k}={v:.2f}" for k, v in sorted(self.route_share.items())
+        )
+        return f"{self.total.row()}  routes: {share}"
+
+
+def config_for_load(
+    topology: TopologyConfig,
+    scenario: Scenario,
+    load: float,
+    sim_time: float = 10.0,
+    warmup: float = 2.0,
+    seed: int = 0,
+) -> NetSimConfig:
+    """NetSimConfig generating `load` aggregate jobs/s: the single place
+    that maps a nominal rate to a UE population (capacity sweeps, fixed-load
+    benchmark passes, and examples all scale load through here)."""
+    total_ues = max(len(topology.sites), int(round(load / scenario.lam_per_ue)))
+    return NetSimConfig(
+        topology=topology.scaled_ues(total_ues),
+        scenario=scenario,
+        sim_time=sim_time,
+        warmup=warmup,
+        seed=seed,
+    )
+
+
+def simulate_network(
+    cfg: NetSimConfig,
+    policy: Union[str, RoutingPolicy],
+) -> NetResult:
+    """Run one multi-cell simulation under `policy` and score Def. 1."""
+    sc = cfg.scenario
+    topo = Topology(cfg.topology, model=cfg.model)
+    pol = get_policy(policy).bind(topo)
+    uid = itertools.count()  # fleet-wide unique job ids
+
+    engines: List[SlotEngine] = []
+    for i, site in enumerate(cfg.topology.sites):
+        sim = SimConfig(
+            n_ues=site.n_ues,
+            lam_per_ue=sc.lam_per_ue,
+            n_input=sc.n_input,
+            n_output=sc.n_output,
+            b_total=sc.b_total,
+            sim_time=cfg.sim_time,
+            warmup=cfg.warmup,
+            seed=cfg.seed,
+            channel=dataclasses.replace(
+                site.channel, bytes_per_token=sc.bytes_per_token
+            ),
+        )
+
+        def wireline(job: Job, t: float, _site: int = i) -> float:
+            job.route = pol.route(job, _site, t)
+            topo.nodes[job.route].commit(job)  # visible while in transit
+            return topo.wireline_latency(_site, job.route)
+
+        def deliver(job: Job) -> None:
+            fn = topo.nodes[job.route]
+            fn.settle(job)
+            fn.node.submit(job)
+
+        engines.append(
+            SlotEngine(
+                sim,
+                np.random.default_rng(cfg.seed + 7919 * i),
+                packet_priority=True,  # ICC-native network (§IV-B)
+                wireline=wireline,
+                deliver=deliver,
+                cell=i,
+                uid_iter=uid,
+            )
+        )
+
+    slots = {e.slot for e in engines}
+    if len(slots) != 1:
+        raise ValueError(f"sites must share one slot duration, got {slots}")
+
+    # shared slot + shared sim_time => identical n_slots across engines
+    for s in range(engines[0].n_slots):
+        t_slot_end = 0.0
+        for e in engines:
+            t_slot_end = e.step(s)
+        for fn in topo.nodes.values():
+            fn.node.run_until(t_slot_end)
+    for fn in topo.nodes.values():
+        fn.node.run_until(float("inf"))
+
+    # ------------------------------------------------------------- scoring
+    all_jobs = [j for e in engines for j in e.jobs]
+    total = score_jobs(all_jobs, engines[0].sim, pol.name, management="joint")
+    per_cell = {
+        site.name: score_jobs(
+            engines[i].jobs, engines[i].sim, f"{pol.name}/{site.name}",
+            management="joint",
+        )
+        for i, site in enumerate(cfg.topology.sites)
+    }
+    counts = collections.Counter(j.route for j in all_jobs if j.route)
+    n_routed = max(sum(counts.values()), 1)
+    share = {k: v / n_routed for k, v in counts.items()}
+    return NetResult(
+        policy=pol.name, total=total, per_cell=per_cell, route_share=share
+    )

@@ -128,6 +128,10 @@ class InferenceEngine:
     def free_slots(self) -> List[int]:
         return [i for i, a in enumerate(self.active) if not a]
 
+    def active_uids(self) -> List[int]:
+        """uids of the requests currently occupying decode slots."""
+        return [r.uid for r in self._slot_req if r is not None]
+
     @property
     def n_active(self) -> int:
         return sum(self.active)

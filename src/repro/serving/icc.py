@@ -16,6 +16,7 @@ smoke models; identical code paths on a TPU mesh).
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import heapq
 import itertools
@@ -33,6 +34,7 @@ class ICCRequest:
     t_gen: float  # generation time at the UE
     t_comm: float  # observed UE->compute latency (air + wireline)
     b_total: float  # end-to-end latency budget
+    route: str = "local"  # fleet node the network layer routed this job to
 
     @property
     def arrival(self) -> float:  # arrival at the compute queue
@@ -53,10 +55,23 @@ class ServeStats:
     n_satisfied: int = 0
     n_dropped: int = 0
     e2e: List[float] = dataclasses.field(default_factory=list)
+    # per-route breakdown (multi-cell traces tag requests with the fleet
+    # node that served them; single-node serving is all "local")
+    route_total: Dict[str, int] = dataclasses.field(
+        default_factory=collections.Counter
+    )
+    route_satisfied: Dict[str, int] = dataclasses.field(
+        default_factory=collections.Counter
+    )
 
     @property
     def satisfaction(self) -> float:
         return self.n_satisfied / max(self.n_total, 1)
+
+    def route_satisfaction(self, route: str) -> float:
+        return self.route_satisfied.get(route, 0) / max(
+            self.route_total.get(route, 0), 1
+        )
 
 
 class ICCServer:
@@ -81,6 +96,7 @@ class ICCServer:
         key = r.priority if self.policy == "priority" else r.arrival
         heapq.heappush(self._queue, (key, next(self._seq), r))
         self.stats.n_total += 1
+        self.stats.route_total[r.route] += 1
 
     def _admit(self) -> None:
         while self._queue and self.engine.free_slots():
@@ -95,19 +111,15 @@ class ICCServer:
             self._inflight[r.req.uid] = r
 
     def _reap(self) -> None:
-        done = [
-            uid for uid, r in self._inflight.items()
-            if not any(
-                sr is not None and sr.uid == uid
-                for sr in self.engine._slot_req
-            )
-        ]
+        active = set(self.engine.active_uids())
+        done = [uid for uid in self._inflight if uid not in active]
         for uid in done:
             r = self._inflight.pop(uid)
             e2e = self.now - r.t_gen  # virtual clock shares t_gen's timeline
             self.stats.e2e.append(e2e)
             if e2e <= r.b_total:
                 self.stats.n_satisfied += 1
+                self.stats.route_satisfied[r.route] += 1
 
     def run(self, requests: List[ICCRequest]) -> ServeStats:
         """Drive the event loop over a pre-generated arrival trace."""

@@ -4,6 +4,9 @@ grouping, RoPE/M-RoPE behaviour, decode two-part softmax."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.models.attention import chunked_attention, naive_attention

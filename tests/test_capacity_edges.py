@@ -1,0 +1,115 @@
+"""Edge cases: capacity_from_sweep interpolation + ComputeNode deadline
+dropping under disjoint management (ISSUE satellite coverage)."""
+
+import math
+
+import pytest
+
+from repro.core.capacity import capacity_from_sweep
+from repro.core.scheduler import ComputeNode, Job
+from repro.core.simulator import SimResult
+
+
+def res(sat):
+    return SimResult("x", 100, sat, 0.0, 0.0, 0.0, 0.0, 0.0)
+
+
+class TestCapacityFromSweep:
+    def test_all_above_alpha_returns_last_rate(self):
+        rates = [10, 20, 30]
+        assert capacity_from_sweep(rates, [res(1.0), res(0.99), res(0.97)]) == 30
+
+    def test_all_below_alpha_returns_zero(self):
+        rates = [10, 20, 30]
+        assert capacity_from_sweep(rates, [res(0.9), res(0.8), res(0.1)]) == 0.0
+
+    def test_exact_crossing_at_alpha_counts_as_satisfied(self):
+        # satisfaction == alpha is satisfied (Def. 2: >= alpha), and no
+        # interpolation happens past it since sat_prev > alpha is false.
+        rates = [10, 20, 30]
+        assert capacity_from_sweep(rates, [res(1.0), res(0.95), res(0.5)]) == 20
+
+    def test_linear_interpolation_between_points(self):
+        rates = [10, 20]
+        cap = capacity_from_sweep(rates, [res(1.0), res(0.90)], alpha=0.95)
+        assert cap == pytest.approx(15.0)
+
+    def test_first_point_below_alpha_is_zero_not_interpolated(self):
+        rates = [10, 20]
+        assert capacity_from_sweep(rates, [res(0.5), res(0.1)]) == 0.0
+
+    def test_accepts_bare_floats(self):
+        # network_sweep returns plain satisfaction floats
+        rates = [10, 20]
+        assert capacity_from_sweep(rates, [1.0, 0.90], alpha=0.95) == \
+            pytest.approx(15.0)
+
+    def test_empty_sweep(self):
+        assert capacity_from_sweep([], []) == 0.0
+
+
+def job(uid=0, t_gen=0.0, b_total=0.100, t_arrival=None):
+    j = Job(uid=uid, ue=0, t_gen=t_gen, n_input=15, n_output=15,
+            b_total=b_total)
+    j.t_compute_arrival = t_gen + 0.005 if t_arrival is None else t_arrival
+    return j
+
+
+class TestComputeNodeDeadlineDrop:
+    def test_disjoint_drops_job_exceeding_comp_budget(self):
+        # service 30 ms > b_comp 20 ms: infeasible the moment it would start
+        node = ComputeNode(lambda j: 0.030, policy="fifo",
+                           drop_infeasible=True, comp_budget=0.020)
+        j = job()
+        node.submit(j)
+        node.run_until(float("inf"))
+        assert j.dropped and node.dropped == [j] and node.completed == []
+        assert math.isnan(j.t_complete)
+
+    def test_disjoint_serves_job_within_comp_budget(self):
+        node = ComputeNode(lambda j: 0.030, policy="fifo",
+                           drop_infeasible=True, comp_budget=0.050)
+        j = job()
+        node.submit(j)
+        node.run_until(float("inf"))
+        assert not j.dropped
+        assert j.t_complete == pytest.approx(j.t_compute_arrival + 0.030)
+
+    def test_drop_horizon_is_min_of_deadline_and_budget(self):
+        # b_comp would allow it, but the E2E deadline is tighter
+        node = ComputeNode(lambda j: 0.030, policy="fifo",
+                           drop_infeasible=True, comp_budget=0.050)
+        j = job(b_total=0.020)  # deadline at 20 ms, arrival at 5 ms
+        node.submit(j)
+        node.run_until(float("inf"))
+        assert j.dropped
+
+    def test_queueing_delay_counts_against_budget(self):
+        # two 30 ms jobs, 50 ms sub-budget: the second starts 30 ms after
+        # its arrival and would finish at +60 ms > b_comp -> dropped.
+        node = ComputeNode(lambda j: 0.030, policy="fifo",
+                           drop_infeasible=True, comp_budget=0.050)
+        j1, j2 = job(uid=1), job(uid=2)
+        node.submit(j1)
+        node.submit(j2)
+        node.run_until(float("inf"))
+        assert not j1.dropped and j2.dropped
+
+    def test_no_drop_without_flag(self):
+        # the 5G-MEC baselines queue doomed jobs instead of dropping
+        node = ComputeNode(lambda j: 0.030, policy="fifo",
+                           drop_infeasible=False, comp_budget=0.020)
+        j = job()
+        node.submit(j)
+        node.run_until(float("inf"))
+        assert not j.dropped and node.completed == [j]
+
+    def test_pending_jobs_and_estimated_free_at(self):
+        node = ComputeNode(lambda j: 0.010, policy="priority")
+        jobs = [job(uid=i) for i in range(3)]
+        for j in jobs:
+            node.submit(j)
+        assert sorted(p.uid for p in node.pending_jobs()) == [0, 1, 2]
+        assert node.estimated_free_at(0.0) == pytest.approx(0.030)
+        node.run_until(float("inf"))
+        assert node.pending_jobs() == []

@@ -5,8 +5,11 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
+
+from conftest import abstract_mesh
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.configs import get_config
@@ -191,7 +194,7 @@ class TestSharding:
         import numpy as _np
         devs = _np.array(jax.devices() * 4).reshape(2, 2)[:1, :1]
         # single-device container: simulate with AbstractMesh
-        mesh = jax.sharding.AbstractMesh((2, 2), ("data", "model"))
+        mesh = abstract_mesh((2, 2), ("data", "model"))
         ctx = sh._Ctx(mesh, sh.TRAIN_RULES)
         used = set()
         # dim 7 not divisible by model=2 -> replicated
@@ -202,7 +205,7 @@ class TestSharding:
     def test_axis_used_once(self):
         from repro import sharding as sh
 
-        mesh = jax.sharding.AbstractMesh((2, 2), ("data", "model"))
+        mesh = abstract_mesh((2, 2), ("data", "model"))
         ctx = sh._Ctx(mesh, sh.TRAIN_RULES)
         used = set()
         a = sh._resolve_dim(8, "ffn", ctx, used)

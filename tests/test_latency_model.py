@@ -1,6 +1,7 @@
 """LLM latency model (paper Eq. 7/8) + extended-fidelity properties."""
 
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.latency_model import (

@@ -4,6 +4,8 @@ in repro.launch.dryrun (results under benchmarks/results/dryrun)."""
 
 import jax
 import jax.numpy as jnp
+
+from conftest import abstract_mesh
 import pytest
 
 from repro.configs import get_config
@@ -104,7 +106,7 @@ class TestDecodeRulesV3:
     def test_embed_sharded_over_data(self):
         from repro import sharding as sh
 
-        mesh = jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+        mesh = abstract_mesh((16, 16), ("data", "model"))
         ctx = sh._Ctx(mesh, sh.DECODE_RULES_V3)
         assert sh._resolve_dim(8192, "embed", ctx, set()) == "data"
         # batch stays replicated in V2/V3

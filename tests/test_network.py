@@ -1,0 +1,240 @@
+"""Multi-cell network subsystem: topology, fleet, routing, simulation."""
+
+import dataclasses
+
+import pytest
+
+from repro.core.capacity import capacity_from_sweep, network_sweep
+from repro.core.scheduler import Job
+from repro.network import (
+    GPU_SPECS,
+    NetSimConfig,
+    POLICIES,
+    SCENARIOS,
+    SiteConfig,
+    Topology,
+    TopologyConfig,
+    get_policy,
+    get_scenario,
+    list_scenarios,
+    simulate_network,
+    three_cell_hetero,
+)
+
+
+def tiny_topology(**kw):
+    """Two small cells (fast H100 / slow L4) + MEC, for quick sims."""
+    return TopologyConfig(
+        sites=(
+            SiteConfig("a", n_ues=8, ran_gpu="h100"),
+            SiteConfig("b", n_ues=8, ran_gpu="l4"),
+        ),
+        **kw,
+    )
+
+
+def make_job(uid=0, t_gen=0.0, n_input=15, n_output=15, b_total=0.080):
+    j = Job(uid=uid, ue=0, t_gen=t_gen, n_input=n_input, n_output=n_output,
+            b_total=b_total)
+    j.t_compute_arrival = t_gen + 0.005
+    return j
+
+
+class TestScenarios:
+    def test_registry_contains_paper_and_extensions(self):
+        assert {"ar_translation", "chatbot", "vision_prompt"} <= set(SCENARIOS)
+        assert list_scenarios() == sorted(SCENARIOS)
+
+    def test_table_i_values(self):
+        sc = get_scenario("ar_translation")
+        assert (sc.n_input, sc.n_output, sc.b_total) == (15, 15, 0.080)
+
+    def test_unknown_scenario_raises(self):
+        with pytest.raises(KeyError, match="unknown scenario"):
+            get_scenario("nope")
+
+
+class TestTopology:
+    def test_fleet_build(self):
+        topo = Topology(three_cell_hetero())
+        # MEC + two RAN nodes (cell2 has no compute)
+        assert set(topo.nodes) == {"mec", "ran:cell0", "ran:cell1"}
+        assert topo.ran_of == ["ran:cell0", "ran:cell1", None]
+        assert topo.local_node(2) == "mec"
+
+    def test_heterogeneous_fleet_service_times(self):
+        topo = Topology(tiny_topology())
+        job = make_job()
+        fast = topo.nodes["ran:a"].service_time(job)
+        slow = topo.nodes["ran:b"].service_time(job)
+        assert slow > 5 * fast  # L4 is an order of magnitude behind H100
+
+    def test_candidates_local_first(self):
+        topo = Topology(tiny_topology())
+        assert topo.candidates(0) == ["ran:a", "ran:b", "mec"]
+        assert topo.candidates(1) == ["ran:b", "ran:a", "mec"]
+
+    def test_wireline_latencies(self):
+        cfg = tiny_topology(t_inter_site=0.012)
+        topo = Topology(cfg)
+        site = cfg.sites[0]
+        assert topo.wireline_latency(0, "ran:a") == site.t_fronthaul
+        assert topo.wireline_latency(0, "mec") == site.t_backhaul_mec
+        assert topo.wireline_latency(0, "ran:b") == 0.012
+
+    def test_duplicate_site_names_rejected(self):
+        cfg = TopologyConfig(
+            sites=(SiteConfig("a", n_ues=4), SiteConfig("a", n_ues=4))
+        )
+        with pytest.raises(ValueError, match="unique"):
+            Topology(cfg)
+
+    def test_in_transit_commitments(self):
+        topo = Topology(tiny_topology())
+        fn = topo.nodes["ran:a"]
+        job = make_job()
+        idle_finish = fn.predict_finish(job, 0.005, 0.0)
+        fn.commit(job)
+        assert fn.in_transit == 1
+        # a committed (in-flight) job pushes later predictions out
+        assert fn.predict_finish(job, 0.005, 0.0) > idle_finish
+        fn.settle(job)
+        assert fn.in_transit == 0 and fn.in_transit_s == 0.0
+        assert fn.predict_finish(job, 0.005, 0.0) == idle_finish
+
+    def test_scaled_ues_redistributes(self):
+        cfg = three_cell_hetero(n_ues_per_cell=10).scaled_ues(90)
+        assert sum(s.n_ues for s in cfg.sites) == 90
+        assert all(s.n_ues == 30 for s in cfg.sites)
+        tiny = three_cell_hetero().scaled_ues(2)  # never below 1 UE/site
+        assert all(s.n_ues >= 1 for s in tiny.sites)
+
+    def test_scaled_ues_exact_under_skew(self):
+        # skewed populations must still sum exactly to the requested total
+        # (the sweep's x-axis is the generated load)
+        cfg = TopologyConfig(
+            sites=(SiteConfig("big", n_ues=98), SiteConfig("s1", n_ues=1),
+                   SiteConfig("s2", n_ues=1))
+        )
+        for total in (10, 37, 100):
+            scaled = cfg.scaled_ues(total)
+            assert sum(s.n_ues for s in scaled.sites) == total
+            assert all(s.n_ues >= 1 for s in scaled.sites)
+
+    def test_scaled_ues_all_zero_template(self):
+        # an all-zero template splits the load equally, still exact-total
+        cfg = TopologyConfig(
+            sites=tuple(SiteConfig(f"s{i}", n_ues=0) for i in range(3))
+        )
+        scaled = cfg.scaled_ues(10)
+        assert sum(s.n_ues for s in scaled.sites) == 10
+        assert all(s.n_ues >= 3 for s in scaled.sites)
+
+
+class TestRouting:
+    def test_local_only(self):
+        topo = Topology(three_cell_hetero())
+        pol = get_policy("local_only").bind(topo)
+        assert pol.route(make_job(), 0, 0.0) == "ran:cell0"
+        assert pol.route(make_job(), 2, 0.0) == "mec"  # no RAN node -> MEC
+
+    def test_mec_only(self):
+        topo = Topology(tiny_topology())
+        pol = get_policy("mec_only").bind(topo)
+        assert pol.route(make_job(), 0, 0.0) == "mec"
+
+    def test_least_loaded_prefers_idle(self):
+        topo = Topology(tiny_topology())
+        topo.nodes["ran:a"].node.busy_until = 10.0  # local busy
+        for i in range(3):
+            topo.nodes["ran:a"].node.submit(make_job(uid=i))
+        pol = get_policy("least_loaded").bind(topo)
+        assert pol.route(make_job(uid=9), 0, 0.0) != "ran:a"
+
+    def test_slack_aware_stays_local_when_feasible(self):
+        topo = Topology(tiny_topology())
+        pol = get_policy("slack_aware").bind(topo)
+        assert pol.route(make_job(), 0, 0.0) == "ran:a"
+
+    def test_slack_aware_offloads_overloaded_local(self):
+        topo = Topology(tiny_topology())
+        topo.nodes["ran:a"].node.busy_until = 1.0  # queue drains after deadline
+        pol = get_policy("slack_aware").bind(topo)
+        target = pol.route(make_job(t_gen=0.0), 0, 0.0)
+        assert target != "ran:a"
+        # the L4 can't meet the 80 ms budget either, so the MEC wins
+        assert target == "mec"
+
+    def test_unknown_policy_raises(self):
+        with pytest.raises(KeyError, match="unknown routing policy"):
+            get_policy("nope")
+
+    def test_registry(self):
+        assert {"local_only", "mec_only", "least_loaded",
+                "slack_aware"} == set(POLICIES)
+
+
+class TestNetworkSimulation:
+    @classmethod
+    def _cfg(cls, **kw):
+        kw.setdefault("topology", tiny_topology())
+        kw.setdefault("sim_time", 3.0)
+        kw.setdefault("warmup", 0.5)
+        return NetSimConfig(**kw)
+
+    def test_runs_all_policies(self):
+        for policy in POLICIES:
+            r = simulate_network(self._cfg(), policy)
+            assert r.policy == policy
+            assert r.n_jobs > 0
+            assert 0.0 <= r.satisfaction <= 1.0
+            assert abs(sum(r.route_share.values()) - 1.0) < 1e-9
+
+    def test_deterministic_same_seed(self):
+        a = simulate_network(self._cfg(seed=3), "slack_aware")
+        b = simulate_network(self._cfg(seed=3), "slack_aware")
+        assert a.total == b.total
+        assert a.route_share == b.route_share
+
+    def test_jobs_are_route_tagged_and_cell_tagged(self):
+        cfg = self._cfg()
+        r = simulate_network(cfg, "slack_aware")
+        assert set(r.per_cell) == {"a", "b"}
+        assert set(r.route_share) <= {"ran:a", "ran:b", "mec"}
+
+    def test_mec_only_matches_single_node_shape(self):
+        r = simulate_network(self._cfg(), "mec_only")
+        assert r.route_share == {"mec": 1.0}
+
+    def test_mismatched_slots_rejected(self):
+        site = dataclasses.replace(
+            tiny_topology().sites[0],
+            channel=dataclasses.replace(
+                tiny_topology().sites[0].channel, scs_hz=30e3
+            ),
+        )
+        cfg = self._cfg(
+            topology=TopologyConfig(sites=(site, tiny_topology().sites[1]))
+        )
+        with pytest.raises(ValueError, match="slot duration"):
+            simulate_network(cfg, "mec_only")
+
+    def test_slack_aware_dominates_on_hetero_fleet(self):
+        # the acceptance-criterion comparison, shrunk to test scale:
+        # >=3 cells, >=2 GPU specs, slack_aware >= local_only and mec_only.
+        topo = three_cell_hetero()
+        rates = [40, 80, 120]
+        caps = {}
+        for policy in ("local_only", "mec_only", "slack_aware"):
+            curve = network_sweep(topo, policy, rates, sim_time=3.0,
+                                  warmup=0.5, n_seeds=1)
+            caps[policy] = capacity_from_sweep(rates, curve)
+        assert caps["slack_aware"] >= caps["local_only"]
+        assert caps["slack_aware"] >= caps["mec_only"]
+
+
+class TestGpuSpecs:
+    def test_registry_names_match(self):
+        for name, spec in GPU_SPECS.items():
+            assert spec.name == name
+        assert {"h100", "l4", "a100", "gh200-nvl2", "tpu-v5e"} <= set(GPU_SPECS)

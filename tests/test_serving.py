@@ -79,7 +79,8 @@ class TestICCServer:
     def _trace(self, n, b_total, t_comm=0.01):
         return [
             ICCRequest(mk_req(i, new=3), t_gen=0.01 * i, t_comm=t_comm,
-                       b_total=b_total)
+                       b_total=b_total,
+                       route="ran:cell0" if i % 2 == 0 else "mec")
             for i in range(n)
         ]
 
@@ -89,6 +90,11 @@ class TestICCServer:
         eng.warmup(mk_req(0).prompt)
         stats = ICCServer(eng, policy="priority").run(self._trace(6, 60.0))
         assert stats.n_satisfied == 6 and stats.n_dropped == 0
+        # route-tagged requests break down per fleet node
+        assert stats.route_total == {"ran:cell0": 3, "mec": 3}
+        assert stats.route_satisfaction("ran:cell0") == 1.0
+        assert stats.route_satisfaction("mec") == 1.0
+        assert stats.route_satisfaction("unknown") == 0.0
 
     def test_infeasible_dropped_not_served(self):
         m, p = model_params()
