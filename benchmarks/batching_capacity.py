@@ -1,0 +1,216 @@
+"""Continuous-batching service capacity: max-batch x GPU sweep (beyond-paper).
+
+Sweeps Def.-2 service capacity (alpha = 95 % Def.-1 satisfaction) of a
+single-cell deployment whose compute node is the token-granular
+`BatchedComputeNode`, for max_batch in {1, 4, 8, 16} on A100 / H100 / L4,
+under the `rag_doc_qa` scenario (2k-token edge-resident context, 32 output
+tokens, 4 s budget). Two claims:
+
+  * iteration-level batching raises capacity over single-server serving
+    (max_batch = 1) at matched hardware — decode is memory-bound, so
+    sharing the weight read across the batch is nearly free throughput;
+  * on the memory-constrained L4, KV-cache admission binds before the
+    batch is full: the cache (10 GB after llama2-7b weights) holds ~9
+    concurrent 2k-context jobs, so max_batch = 16 buys nothing — queueing
+    is due to cache, not compute.
+
+Outputs:
+  benchmarks/results/batching_capacity.json  full curves + probe metrics
+  BENCH_batching.json (repo root)            capacity matrix, the tracked
+                                             baseline for the PR trajectory
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, Optional, Sequence
+
+from repro.batching import BatchedComputeNode, KVCache
+from repro.core.capacity import capacity_from_sweep
+from repro.core.channel import ChannelConfig
+from repro.core.latency_model import LLAMA2_7B, LatencyModel
+from repro.core.scheduler import Job
+from repro.core.simulator import SchemeConfig, SimConfig, simulate
+from repro.network.fleet import GPU_SPECS
+from repro.network.scenarios import SCENARIOS
+
+# aggregate-rate grids bracketing each GPU's expected capacity range
+RATE_GRIDS: Dict[str, Sequence[float]] = {
+    "l4": (0.25, 0.5, 1.0, 2.0, 3.0, 4.0, 5.0),
+    "a100": (1.0, 2.0, 3.0, 4.0, 6.0, 8.0, 10.0, 13.0, 16.0),
+    "h100": (2.0, 4.0, 6.0, 9.0, 12.0, 16.0, 22.0, 28.0, 36.0, 44.0),
+}
+BATCHES = (1, 4, 8, 16)
+
+# ICC joint-management stance at the batched node: priority queue,
+# token-granular deadline dropping, RAN-sited wireline latency.
+SCHEME = SchemeConfig("icc_batched", 0.005, True, "priority", "joint")
+
+
+def run(
+    out_dir: str = "benchmarks/results",
+    results_name: str = "batching_capacity.json",
+    bench_path: str = "BENCH_batching.json",
+    gpus: Sequence[str] = ("a100", "h100", "l4"),
+    batches: Sequence[int] = BATCHES,
+    rate_grids: Optional[Dict[str, Sequence[float]]] = None,
+    sim_time: float = 30.0,
+    warmup: float = 2.0,
+    n_seeds: int = 2,
+    alpha: float = 0.95,
+) -> dict:
+    sc = SCENARIOS["rag_doc_qa"]
+    rate_grids = dict(RATE_GRIDS, **(rate_grids or {}))
+    probe_job = Job(uid=-1, ue=0, t_gen=0.0, n_input=sc.n_input,
+                    n_output=sc.n_output, b_total=sc.b_total)
+    out = {
+        "scenario": sc.name,
+        "alpha": alpha,
+        "sim_time": sim_time,
+        "n_seeds": n_seeds,
+        "model": LLAMA2_7B.name,
+        "gpus": {},
+    }
+
+    t_all = time.perf_counter()
+    for gpu in gpus:
+        spec = GPU_SPECS[gpu]
+        lm = LatencyModel(spec, LLAMA2_7B, fidelity="extended")
+        cache_cap = KVCache(spec, LLAMA2_7B).jobs_capacity(probe_job)
+        rates = list(rate_grids[gpu])
+        out["gpus"][gpu] = {"cache_job_cap": cache_cap, "per_batch": {}}
+
+        for mb in batches:
+            t0 = time.perf_counter()
+            holder: Dict[str, BatchedComputeNode] = {}
+
+            def factory() -> BatchedComputeNode:
+                holder["node"] = BatchedComputeNode(
+                    lm, max_batch=mb, policy=SCHEME.compute_policy,
+                    drop_infeasible=SCHEME.drop_infeasible,
+                )
+                return holder["node"]
+
+            curve, probes = [], []
+            for lam in rates:
+                sats = []
+                for s in range(n_seeds):
+                    cfg = SimConfig(
+                        n_ues=max(1, int(round(lam / sc.lam_per_ue))),
+                        lam_per_ue=sc.lam_per_ue,
+                        n_input=sc.n_input,
+                        n_output=sc.n_output,
+                        b_total=sc.b_total,
+                        sim_time=sim_time,
+                        warmup=warmup,
+                        seed=1000 * s,
+                        channel=ChannelConfig(bytes_per_token=sc.bytes_per_token),
+                    )
+                    res = simulate(SCHEME, cfg, node_factory=factory)
+                    sats.append(res.satisfaction)
+                node = holder["node"]  # last seed's node: engine counters
+                curve.append(sum(sats) / len(sats))
+                probes.append({
+                    "rate": lam,
+                    "satisfaction": round(curve[-1], 4),
+                    "avg_ttft_ms": _ms(res.avg_ttft),
+                    "p99_ttft_ms": _ms(res.p99_ttft),
+                    "avg_tbt_ms": _ms(res.avg_tbt),
+                    "p99_e2e_ms": _ms(res.p99_e2e),
+                    "avg_batch": round(node.stats.avg_batch(), 2),
+                    "peak_batch": node.stats.peak_batch,
+                    "kv_blocked_iterations": node.stats.kv_blocked_iterations,
+                    "kv_peak_frac": round(
+                        node.stats.peak_kv_bytes / node.kv.capacity_bytes, 3
+                    ),
+                    "preempted": node.stats.preempted,
+                })
+
+            cap = capacity_from_sweep(rates, curve, alpha=alpha)
+            saturated = all(s >= alpha for s in curve)
+            # probe = the highest still-satisfied operating point (serving
+            # metrics); stress = the top swept rate, where demand exceeds
+            # capacity — that is where cache-vs-compute binding shows.
+            probe = max(
+                (p for p in probes if p["satisfaction"] >= alpha),
+                key=lambda p: p["rate"], default=probes[0],
+            )
+            stress = probes[-1]
+            kv_bound = (
+                stress["kv_blocked_iterations"] > 0
+                and stress["peak_batch"] < mb
+            )
+            out["gpus"][gpu]["per_batch"][mb] = {
+                "rates": rates,
+                "satisfaction": [round(s, 4) for s in curve],
+                "capacity": cap,
+                "saturated": saturated,
+                "kv_bound": kv_bound,
+                "probe": probe,
+                "stress": stress,
+                "wall_clock_s": round(time.perf_counter() - t0, 2),
+            }
+            mark = ">=" if saturated else "  "
+            print(f"[batching] {gpu:5s} mb={mb:2d} capacity{mark}{cap:6.2f} "
+                  f"jobs/s  ttft={probe['avg_ttft_ms']}ms "
+                  f"tbt={probe['avg_tbt_ms']}ms  "
+                  f"stress_peak_batch={stress['peak_batch']}"
+                  f"{'  KV-BOUND' if kv_bound else ''}")
+
+        per = out["gpus"][gpu]["per_batch"]
+        best = max(per, key=lambda m: per[m]["capacity"])
+        mb1_cap = per[min(batches)]["capacity"]
+        out["gpus"][gpu]["best_mb"] = best
+        # mb=1 can sit below the lowest swept rate (the L4 cannot hold the
+        # budget even at the sweep floor): the ratio is then meaningless,
+        # record None rather than a divide-by-epsilon artifact.
+        out["gpus"][gpu]["gain_best_vs_mb1"] = (
+            per[best]["capacity"] / mb1_cap - 1.0 if mb1_cap > 0 else None
+        )
+    out["wall_clock_s"] = round(time.perf_counter() - t_all, 2)
+
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, results_name), "w") as f:
+        json.dump(out, f, indent=1)
+    # compact tracked baseline: the capacity matrix + the two claim flags
+    baseline = {
+        "scenario": sc.name,
+        "capacity": {
+            gpu: {str(mb): d["per_batch"][mb]["capacity"] for mb in batches}
+            for gpu, d in out["gpus"].items()
+        },
+        "gain_best_vs_mb1": {
+            gpu: (round(g, 3) if (g := d["gain_best_vs_mb1"]) is not None
+                  else None)
+            for gpu, d in out["gpus"].items()
+        },
+        "kv_bound": {
+            gpu: {str(mb): d["per_batch"][mb]["kv_bound"] for mb in batches}
+            for gpu, d in out["gpus"].items()
+        },
+        "cache_job_cap": {
+            gpu: d["cache_job_cap"] for gpu, d in out["gpus"].items()
+        },
+        "sim_time": sim_time,
+        "n_seeds": n_seeds,
+        "wall_clock_s": out["wall_clock_s"],
+    }
+    with open(bench_path, "w") as f:
+        json.dump(baseline, f, indent=1)
+    for gpu, d in out["gpus"].items():
+        gain = d["gain_best_vs_mb1"]
+        gain_s = (f"+{gain:.0%} vs mb=1" if gain is not None
+                  else "mb=1 below the sweep floor")
+        print(f"[batching] {gpu}: best mb={d['best_mb']} ({gain_s}), "
+              f"cache holds {d['cache_job_cap']} jobs")
+    return out
+
+
+def _ms(v: Optional[float]) -> Optional[float]:
+    return round(v * 1e3, 1) if v is not None else None
+
+
+if __name__ == "__main__":
+    run()

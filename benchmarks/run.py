@@ -4,15 +4,19 @@ benchmarks/results/.
 
 Full-fidelity figure sweeps:  python -m benchmarks.fig6_capacity  (etc.)
 This runner uses reduced sweeps to stay fast while still validating every
-claim direction.
+claim direction. ``--quick`` trims further (shorter sims, coarser grids)
+for the per-PR CI pass; every reduced output lands in
+``benchmarks/results/*_quick.json`` so the tracked full-fidelity baselines
+(BENCH_network.json, BENCH_batching.json) are never clobbered.
 """
 
 from __future__ import annotations
 
+import argparse
 import sys
 
 
-def main() -> None:
+def main(quick: bool = False) -> None:
     from . import (
         ablation_scheduler,
         fig4_queueing,
@@ -23,6 +27,7 @@ def main() -> None:
     )
 
     rows = []
+    sim_time = 8.0 if quick else 15.0
 
     r4 = fig4_queueing.run()
     rows.append(("fig4.capacity_joint_ran_per_s", r4["capacities"]["joint_ran"],
@@ -30,7 +35,9 @@ def main() -> None:
     rows.append(("fig4.gain_vs_mec", r4["gain_joint_ran_vs_disjoint_mec"],
                  "paper: +0.98"))
 
-    r6 = fig6_capacity.run(rates=range(20, 105, 10), sim_time=15.0, n_seeds=2)
+    r6 = fig6_capacity.run(
+        rates=range(20, 105, 20 if quick else 10), sim_time=sim_time, n_seeds=2
+    )
     rows.append(("fig6.capacity_icc_per_s", r6["schemes"]["icc"]["capacity"],
                  "paper: 80/s"))
     rows.append(("fig6.capacity_mec_per_s",
@@ -42,8 +49,8 @@ def main() -> None:
     # reduced sweep: keep the full-fidelity outputs of
     # `python -m benchmarks.network_capacity` (tracked BENCH_network.json
     # baseline + results/network_capacity.json) intact.
-    rn = network_capacity.run(rates=[40, 80, 120], sim_time=5.0, n_seeds=1,
-                              scenario_loads={},
+    rn = network_capacity.run(rates=[40, 80, 120], sim_time=4.0 if quick else 5.0,
+                              n_seeds=1, scenario_loads={},
                               results_name="network_capacity_quick.json",
                               bench_path="benchmarks/results/BENCH_network_quick.json")
     for pol, res in sorted(rn["policies"].items()):
@@ -60,7 +67,32 @@ def main() -> None:
     rows.append(("network.gain_slack_vs_mec", round(rn["gain_slack_vs_mec"], 3),
                  gain_note))
 
-    r7 = fig7_gpu_scaling.run(gpu_counts=range(4, 15, 2), sim_time=15.0,
+    from . import batching_capacity
+
+    # reduced max-batch x GPU sweep; the tracked BENCH_batching.json baseline
+    # comes from the full `python -m benchmarks.batching_capacity` run.
+    # the rag_doc_qa scoring window needs sim_time > warmup + 2*b_total (9 s),
+    # so the quick trim floors at 12 s rather than the global `sim_time`
+    rb = batching_capacity.run(
+        gpus=("a100", "l4"), batches=(1, 8),
+        rate_grids={"l4": (0.25, 1.0, 3.0), "a100": (1.0, 3.0, 6.0, 10.0)},
+        sim_time=12.0 if quick else 15.0, warmup=1.0, n_seeds=1,
+        results_name="batching_capacity_quick.json",
+        bench_path="benchmarks/results/BENCH_batching_quick.json",
+    )
+    for gpu, d in sorted(rb["gpus"].items()):
+        for mb, res in sorted(d["per_batch"].items()):
+            note = f"rag_doc_qa jobs/s @ 95%, cache holds {d['cache_job_cap']}"
+            if res["saturated"]:
+                note += " (>=: reduced range)"
+            if res["kv_bound"]:
+                note += " KV-BOUND"
+            rows.append((f"batching.capacity_{gpu}_mb{mb}", res["capacity"], note))
+        rows.append((f"batching.gain_{gpu}_best_vs_mb1",
+                     round(d["gain_best_vs_mb1"], 3),
+                     f"continuous batching, best mb={d['best_mb']}"))
+
+    r7 = fig7_gpu_scaling.run(gpu_counts=range(4, 15, 2), sim_time=sim_time,
                               n_seeds=2)
     rows.append(("fig7.min_gpus_icc", r7["min_gpus"].get("icc"), "paper: 8"))
     rows.append(("fig7.min_gpus_disjoint_ran", r7["min_gpus"].get("disjoint_ran"),
@@ -69,7 +101,7 @@ def main() -> None:
         rows.append(("fig7.cost_saving", r7["cost_saving_vs_disjoint_ran"],
                      "paper: 0.27"))
 
-    ra = ablation_scheduler.run(sim_time=15.0)
+    ra = ablation_scheduler.run(sim_time=sim_time)
     for k, v in ra["satisfaction"].items():
         rows.append((f"ablation.{k}", v, "sat @ 70/s"))
 
@@ -92,4 +124,7 @@ def main() -> None:
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI mode: shortest sims, results in *_quick.json")
+    main(quick=ap.parse_args().quick)

@@ -1,0 +1,104 @@
+"""Continuous-batching study: token-level serving on one edge GPU.
+
+The paper's compute node (Eq. 7/8) serves one job at a time. Real edge LLM
+serving advances in inference iterations — every resident request decodes
+one token per forward pass while new prompts chunk-prefill in the same
+pass, and the HBM weight read is shared across the batch. This study walks
+through what that changes on the `rag_doc_qa` workload (2k-token
+edge-resident context, 32 output tokens, 4 s budget):
+
+  1. one backlogged burst on an A100: how iteration-level batching turns
+     the memory-bound decode into nearly-free extra throughput, and what
+     it costs in time-between-tokens (TBT);
+  2. a live Def.-1 simulation per max_batch: TTFT/TBT distributions and
+     satisfaction at a fixed arrival rate;
+  3. the L4 counterpoint: its 24 GB HBM keeps ~9 concurrent 2k-context
+     jobs after llama2-7b weights, so KV-cache admission — not compute —
+     caps the effective batch (queueing due to cache).
+
+Run:  PYTHONPATH=src python examples/batching_study.py
+"""
+
+import math
+
+from repro.batching import BatchedComputeNode, KVCache
+from repro.core.channel import ChannelConfig
+from repro.core.latency_model import A100, L4, LLAMA2_7B, LatencyModel
+from repro.core.scheduler import Job
+from repro.core.simulator import SchemeConfig, SimConfig, simulate
+from repro.network.scenarios import SCENARIOS
+
+SC = SCENARIOS["rag_doc_qa"]
+# ICC joint-management stance at a RAN-sited batched node
+SCHEME = SchemeConfig("icc_batched", 0.005, True, "priority", "joint")
+
+
+def burst_jobs(n):
+    jobs = []
+    for i in range(n):
+        j = Job(uid=i, ue=0, t_gen=0.0, n_input=SC.n_input,
+                n_output=SC.n_output, b_total=1e9)  # no deadline: raw throughput
+        j.t_compute_arrival = 0.0
+        jobs.append(j)
+    return jobs
+
+
+print("=== 1. Backlogged burst: 24 rag_doc_qa jobs on one A100 ===")
+lm_a100 = LatencyModel(A100, LLAMA2_7B, fidelity="extended")
+base = None
+for mb in (1, 4, 8, 16):
+    node = BatchedComputeNode(lm_a100, max_batch=mb)
+    for j in burst_jobs(24):
+        node.submit(j)
+    node.run_until(math.inf)
+    tput = len(node.completed) / node.busy_until
+    tbt = sum(
+        (j.t_complete - j.t_first_token) / (SC.n_output - 1)
+        for j in node.completed
+    ) / len(node.completed)
+    base = base or tput
+    print(f"  max_batch={mb:2d}  makespan={node.busy_until:6.2f}s "
+          f"throughput={tput:5.2f} jobs/s ({tput / base:4.1f}x)  "
+          f"avg TBT={tbt * 1e3:5.1f} ms  avg batch={node.stats.avg_batch():.1f}")
+print("  decode is memory-bound (weight reads dominate), so co-resident"
+      "\n  requests share the read: throughput scales, TBT degrades slowly.")
+
+print("\n=== 2. Live Def.-1 simulation @ 4 jobs/s (A100) ===")
+for mb in (1, 4, 8, 16):
+    cfg = SimConfig(
+        n_ues=int(4 / SC.lam_per_ue), lam_per_ue=SC.lam_per_ue,
+        n_input=SC.n_input, n_output=SC.n_output, b_total=SC.b_total,
+        sim_time=15.0, warmup=1.0, seed=0,
+        channel=ChannelConfig(bytes_per_token=SC.bytes_per_token),
+    )
+    r = simulate(SCHEME, cfg, node_factory=lambda mb=mb: BatchedComputeNode(
+        lm_a100, max_batch=mb, policy=SCHEME.compute_policy,
+        drop_infeasible=SCHEME.drop_infeasible))
+    print(f"  max_batch={mb:2d}  sat={r.satisfaction:5.3f} "
+          f"ttft={r.avg_ttft * 1e3:7.1f} ms (p99 {r.p99_ttft * 1e3:7.1f})  "
+          f"tbt={r.avg_tbt * 1e3:5.1f} ms  drop={r.drop_rate:.3f}")
+
+print("\n=== 3. The L4 counterpoint: KV-cache admission binds ===")
+lm_l4 = LatencyModel(L4, LLAMA2_7B, fidelity="extended")
+cache = KVCache(L4, LLAMA2_7B)
+cap = cache.jobs_capacity(burst_jobs(1)[0])
+print(f"  L4 HBM {L4.hbm_bytes / 1e9:.0f} GB - weights "
+      f"{LLAMA2_7B.model_bytes / 1e9:.0f} GB = "
+      f"{cache.capacity_bytes / 1e9:.0f} GB KV pool -> holds {cap} "
+      f"concurrent {SC.n_input + SC.n_output}-token jobs")
+stats16 = None
+for mb in (8, 16):
+    node = BatchedComputeNode(lm_l4, max_batch=mb)
+    for j in burst_jobs(24):
+        node.submit(j)
+    node.run_until(math.inf)
+    s = node.stats
+    stats16 = s if mb == 16 else stats16
+    print(f"  max_batch={mb:2d}  throughput="
+          f"{len(node.completed) / node.busy_until:4.2f} jobs/s  "
+          f"peak_batch={s.peak_batch}  kv_blocked_iterations="
+          f"{s.kv_blocked_iterations}")
+assert stats16.peak_batch == cap < 16, "expected the cache, not max_batch, to bind"
+print(f"  max_batch=16 never materializes: the batch stalls at the cache's"
+      f"\n  {cap}-job ceiling — on memory-constrained edge GPUs, capacity"
+      f"\n  planning is KV-pool planning (see BENCH_batching.json).")

@@ -3,6 +3,8 @@ serving (Yang et al., CS.DC 2025), as a production JAX framework.
 
 Subpackages:
   core      the paper: queueing analysis, latency model, 5G SLS, scheduler
+  network   multi-cell topology, heterogeneous fleet, routing policies
+  batching  token-level continuous-batching node + KV-cache admission
   configs   10 assigned architectures (+ the paper's Llama-2-7B)
   models    composable model zoo (dense/moe/ssm/hybrid/vlm/audio)
   kernels   Pallas TPU kernels + jnp oracles

@@ -23,7 +23,7 @@ from .queueing import (
     joint_satisfaction,
     service_capacity,
 )
-from .scheduler import ComputeNode, Job
+from .scheduler import ComputeNode, ComputeNodeProtocol, Job
 from .simulator import SCHEMES, SchemeConfig, SimConfig, SimResult, simulate
 
 __all__ = [
@@ -33,6 +33,7 @@ __all__ = [
     "TPU_V5E",
     "ChannelConfig",
     "ComputeNode",
+    "ComputeNodeProtocol",
     "HardwareSpec",
     "ICCSystem",
     "Job",

@@ -38,6 +38,11 @@ def sweep(
         for seed in range(n_seeds):
             cfg = dataclasses.replace(base, n_ues=n_ues, seed=base.seed + 1000 * seed)
             results.append(simulate(scheme, cfg, service_time))
+
+        def opt_mean(field: str):
+            vals = [v for r in results if (v := getattr(r, field)) is not None]
+            return float(np.mean(vals)) if vals else None
+
         out.append(
             SimResult(
                 scheme=scheme.name,
@@ -50,6 +55,13 @@ def sweep(
                 avg_tokens_per_s=float(
                     np.nanmean([r.avg_tokens_per_s for r in results])
                 ),
+                **{
+                    f: opt_mean(f)
+                    for f in (
+                        "p95_e2e", "p99_e2e", "avg_ttft", "p95_ttft",
+                        "p99_ttft", "avg_tbt", "p95_tbt", "p99_tbt",
+                    )
+                },
             )
         )
     return out

@@ -26,6 +26,7 @@ All latencies are seconds.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Literal, Optional
 
 __all__ = [
@@ -155,16 +156,30 @@ class LatencyModel:
         return max(c / self.hw.flops, mem / self.hw.hbm_bw) + coll
 
     def _ext_decode(self, n_output: int, context: int, batch: int) -> float:
-        t = 0.0
-        for i in range(n_output):
-            ctx = context + i
-            c = batch * self.model.flops_per_token
-            mem = (
-                self.model.model_bytes
-                + batch * (ctx * self.model.kv_bytes_per_token + self.model.state_bytes)
-            )
-            t += max(c / self.hw.flops, mem / self.hw.hbm_bw) + batch * self._collective_per_token()
-        return t
+        """Closed form of the per-token decode sum.
+
+        Step i (0-based) costs  max(t_c, (m0 + slope*i)/bw) + coll  with a
+        constant compute term t_c and a KV-read memory term linear in i, so
+        the roofline crossover context solves analytically: steps before
+        i* = ceil((t_c*bw - m0)/slope) are compute-bound (t_c each), steps
+        from i* on are memory-bound (arithmetic series). O(1) instead of an
+        O(n_output) Python loop — long_500k decodes are half a million steps.
+        """
+        if n_output <= 0:
+            return 0.0
+        t_c = batch * self.model.flops_per_token / self.hw.flops
+        m0 = self.model.model_bytes + batch * (
+            context * self.model.kv_bytes_per_token + self.model.state_bytes
+        )
+        slope = batch * self.model.kv_bytes_per_token
+        bw = self.hw.hbm_bw
+        coll = n_output * batch * self._collective_per_token()
+        if slope <= 0.0:  # no KV growth (e.g. SSM): every step costs the same
+            return n_output * max(t_c, m0 / bw) + coll
+        i_star = min(n_output, max(0, math.ceil((t_c * bw - m0) / slope)))
+        n_mem = n_output - i_star  # steps i_star .. n_output-1 are memory-bound
+        idx_sum = (i_star + n_output - 1) * n_mem / 2.0
+        return i_star * t_c + (n_mem * m0 + slope * idx_sum) / bw + coll
 
     # -------------------------------------------------------------- public
     def prefill_latency(self, n_input: int, batch: int = 1) -> float:
@@ -181,6 +196,39 @@ class LatencyModel:
         """Total T_comp for one job (paper: T_prefill + T_tokengen)."""
         return self.prefill_latency(n_input, batch) + self.decode_latency(
             n_output, context=n_input, batch=batch
+        )
+
+    def iteration_latency(
+        self, prefill_tokens: int, decode_batch: int, context_tokens: float
+    ) -> float:
+        """One continuous-batching engine iteration (Orca/vLLM-style).
+
+        `decode_batch` resident sequences each generate one token while
+        `prefill_tokens` prompt tokens are (chunk-)prefilled in the same
+        forward pass; `context_tokens` is the KV already resident for the
+        work in this pass (sum of the decode sequences' contexts plus the
+        already-prefilled prefix of the chunking job). Weights are read
+        once per iteration — that sharing is the continuous-batching win.
+
+        Degenerate cases recover the whole-job model: a full-prompt prefill
+        iteration equals `prefill_latency(n, batch=1)` and a decode-only
+        iteration at batch 1 equals one step of `decode_latency`, in both
+        fidelities — `BatchedComputeNode(max_batch=1)` relies on this.
+        """
+        new_tokens = prefill_tokens + decode_batch
+        if new_tokens <= 0:
+            return 0.0
+        c = new_tokens * self.model.flops_per_token
+        if self.fidelity == "paper":
+            return max(c / self.hw.flops, self.model.model_bytes / self.hw.hbm_bw)
+        mem = (
+            self.model.model_bytes
+            + (context_tokens + prefill_tokens) * self.model.kv_bytes_per_token
+            + decode_batch * self.model.state_bytes
+        )
+        return (
+            max(c / self.hw.flops, mem / self.hw.hbm_bw)
+            + new_tokens * self._collective_per_token()
         )
 
     def service_rate(self, n_input: int, n_output: int) -> float:

@@ -25,9 +25,9 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import itertools
-from typing import Callable, List, Literal, Optional, Tuple
+from typing import Callable, List, Literal, Optional, Protocol, Tuple, runtime_checkable
 
-__all__ = ["Job", "ComputeNode"]
+__all__ = ["Job", "ComputeNode", "ComputeNodeProtocol"]
 
 
 @dataclasses.dataclass
@@ -44,6 +44,9 @@ class Job:
     # filled in as the job moves through the system
     t_compute_arrival: float = float("nan")  # arrival at compute queue
     t_complete: float = float("nan")
+    # first decode token's emission time (token-granular nodes only; the
+    # whole-job ComputeNode leaves it NaN and score_jobs skips TTFT/TBT)
+    t_first_token: float = float("nan")
     dropped: bool = False
 
     @property
@@ -66,6 +69,37 @@ class Job:
         return self.t_complete - self.t_gen
 
 
+@runtime_checkable
+class ComputeNodeProtocol(Protocol):
+    """What `SlotEngine`/`simulate()`, the fleet, and the routing policies
+    need from a compute node. Implemented by the whole-job `ComputeNode`
+    below and the token-granular `repro.batching.BatchedComputeNode`.
+
+    * ``busy_until`` — time up to which the node's timeline is committed.
+    * ``completed`` / ``dropped`` — terminal job lists.
+    * ``submit(job)`` — enqueue a delivered job (``t_compute_arrival`` set).
+    * ``run_until(now)`` — advance the node's clock to the slot boundary.
+    * ``pending_jobs()`` — queued-but-not-started jobs (undefined order).
+    * ``estimated_free_at(now)`` — routing's load estimate: earliest time a
+      job arriving now could start.
+    * ``__len__`` — queue-depth proxy for least-loaded routing.
+    """
+
+    busy_until: float
+    completed: List[Job]
+    dropped: List[Job]
+
+    def submit(self, job: Job) -> None: ...
+
+    def run_until(self, now: float) -> None: ...
+
+    def pending_jobs(self) -> List[Job]: ...
+
+    def estimated_free_at(self, now: float) -> float: ...
+
+    def __len__(self) -> int: ...
+
+
 class ComputeNode:
     """Single-server (optionally batched) compute node with pluggable policy."""
 
@@ -75,11 +109,23 @@ class ComputeNode:
         policy: Literal["fifo", "priority"] = "fifo",
         drop_infeasible: bool = False,
         comp_budget: Optional[float] = None,  # disjoint-mode b_comp drop horizon
+        deterministic_service: bool = False,
     ):
         self.service_time = service_time
         self.policy = policy
         self.drop_infeasible = drop_infeasible
         self.comp_budget = comp_budget
+        # Deterministic service times (an analytic LatencyModel) may be drawn
+        # once at submit and cached: `estimated_free_at` becomes O(1) via a
+        # running queued-work sum instead of re-invoking service_time per
+        # queued job per routing query. Stochastic samplers must keep the
+        # default (False): drawing at submit would consume RNG at a different
+        # point in the stream than the dispatch-time draw (queueing
+        # Monte-Carlo cross-check), so they keep the dispatch-time call and
+        # the O(queue) estimate path.
+        self.deterministic_service = deterministic_service
+        self._svc_cache: dict[int, float] = {}  # id(job) -> predicted service
+        self._queued_work = 0.0  # sum of cached service over queued jobs
         self._heap: List[Tuple[float, int, Job]] = []
         self._seq = itertools.count()
         self.busy_until = 0.0
@@ -99,12 +145,15 @@ class ComputeNode:
         queued ahead. Routing policies use this; it is an estimate (the
         queue may reorder under `priority`, drops may shorten it).
 
-        Requires a *deterministic* `service_time` (e.g. an analytic
-        LatencyModel): each query re-invokes it per queued job, so a
-        stochastic sampler would both consume extra RNG draws (shifting
-        dispatch-time results) and return noise. Keep stochastic-service
-        nodes out of load-predictive routing."""
+        With ``deterministic_service`` the queued-work sum is maintained
+        incrementally (invalidated on submit/dispatch/drop), so each query
+        is O(1). Otherwise each query re-invokes ``service_time`` per
+        queued job; a stochastic sampler would both consume extra RNG draws
+        (shifting dispatch-time results) and return noise, so keep
+        stochastic-service nodes out of load-predictive routing."""
         t = max(self.busy_until, now)
+        if self.deterministic_service:
+            return t + self._queued_work
         for job in self.pending_jobs():
             t += self.service_time(job)
         return t
@@ -112,6 +161,10 @@ class ComputeNode:
     def submit(self, job: Job) -> None:
         key = job.t_compute_arrival if self.policy == "fifo" else job.priority
         heapq.heappush(self._heap, (key, next(self._seq), job))
+        if self.deterministic_service:
+            svc = self.service_time(job)
+            self._svc_cache[id(job)] = svc
+            self._queued_work += svc
 
     def _drop_horizon(self, job: Job) -> float:
         if self.comp_budget is not None:
@@ -130,7 +183,11 @@ class ComputeNode:
         while self._heap and self.busy_until <= now:
             _, _, job = heapq.heappop(self._heap)
             start = max(self.busy_until, job.t_compute_arrival)
-            svc = self.service_time(job)
+            if self.deterministic_service:
+                svc = self._svc_cache.pop(id(job))
+                self._queued_work = max(self._queued_work - svc, 0.0)
+            else:
+                svc = self.service_time(job)
             if self.drop_infeasible and start + svc > self._drop_horizon(job):
                 job.dropped = True
                 self.dropped.append(job)

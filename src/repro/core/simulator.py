@@ -37,7 +37,7 @@ import numpy as np
 
 from .channel import ChannelConfig, UplinkChannel
 from .latency_model import LatencyModel
-from .scheduler import ComputeNode, Job
+from .scheduler import ComputeNode, ComputeNodeProtocol, Job
 
 __all__ = [
     "SchemeConfig",
@@ -99,14 +99,31 @@ class SimResult:
     avg_comp: float  # mean T_comp (queue + inference)
     avg_e2e: float
     avg_tokens_per_s: float  # paper Fig. 7 bar metric
+    # tail latencies (None when no job completed in the scoring window)
+    p95_e2e: Optional[float] = None
+    p99_e2e: Optional[float] = None
+    # token-granular serving metrics: only token-level nodes (repro.batching)
+    # stamp Job.t_first_token; whole-job nodes leave these None.
+    avg_ttft: Optional[float] = None  # time to first token, from t_gen
+    p95_ttft: Optional[float] = None
+    p99_ttft: Optional[float] = None
+    avg_tbt: Optional[float] = None  # mean time between output tokens
+    p95_tbt: Optional[float] = None
+    p99_tbt: Optional[float] = None
 
     def row(self) -> str:
-        return (
+        s = (
             f"{self.scheme:14s} jobs={self.n_jobs:6d} sat={self.satisfaction:6.3f} "
             f"drop={self.drop_rate:5.3f} comm={self.avg_comm*1e3:6.2f}ms "
             f"comp={self.avg_comp*1e3:6.2f}ms e2e={self.avg_e2e*1e3:6.2f}ms "
             f"tok/s={self.avg_tokens_per_s:7.1f}"
         )
+        if self.avg_ttft is not None:
+            s += (
+                f" ttft={self.avg_ttft*1e3:6.1f}ms(p99={self.p99_ttft*1e3:6.1f})"
+                f" tbt={self.avg_tbt*1e3:5.1f}ms"
+            )
+        return s
 
 
 class SlotEngine:
@@ -229,6 +246,7 @@ def score_jobs(
 
     sat = 0
     comm, comp, e2e, tps = [], [], [], []
+    ttft, tbt = [], []
     for j in scored:
         if j.dropped or math.isnan(j.t_complete):
             continue
@@ -238,6 +256,13 @@ def score_jobs(
         comp.append(t_comp)
         e2e.append(j.e2e)
         tps.append((j.n_input + j.n_output) / j.e2e)
+        if not math.isnan(j.t_first_token):
+            # user-perceived TTFT: generation to first output token (the
+            # same clock as e2e, so comm delay counts against it)
+            ttft.append(j.t_first_token - j.t_gen)
+            tbt.append(
+                (j.t_complete - j.t_first_token) / max(j.n_output - 1, 1)
+            )
         if management == "joint":
             ok = j.e2e <= j.b_total
         else:
@@ -248,6 +273,10 @@ def score_jobs(
             )
         sat += int(ok)
     n_dropped = sum(1 for j in scored if j.dropped or math.isnan(j.t_complete))
+
+    def pct(xs: List[float], q: float) -> Optional[float]:
+        return float(np.percentile(xs, q)) if xs else None
+
     return SimResult(
         scheme=name,
         n_jobs=n,
@@ -257,27 +286,44 @@ def score_jobs(
         avg_comp=float(np.mean(comp)) if comp else float("nan"),
         avg_e2e=float(np.mean(e2e)) if e2e else float("nan"),
         avg_tokens_per_s=float(np.mean(tps)) if tps else float("nan"),
+        p95_e2e=pct(e2e, 95),
+        p99_e2e=pct(e2e, 99),
+        avg_ttft=float(np.mean(ttft)) if ttft else None,
+        p95_ttft=pct(ttft, 95),
+        p99_ttft=pct(ttft, 99),
+        avg_tbt=float(np.mean(tbt)) if tbt else None,
+        p95_tbt=pct(tbt, 95),
+        p99_tbt=pct(tbt, 99),
     )
 
 
 def simulate(
     scheme: SchemeConfig,
     sim: SimConfig,
-    service_time: Callable[[Job], float],
+    service_time: Optional[Callable[[Job], float]] = None,
+    node_factory: Optional[Callable[[], "ComputeNodeProtocol"]] = None,
 ) -> SimResult:
     """Run one slot-stepped simulation and score Def.-1 satisfaction.
 
     `service_time(job)` is the LLM inference latency model — analytic
     (core.latency_model), measured (serving engine calibration), or random
-    (queueing-theory cross-check).
+    (queueing-theory cross-check) — and builds the classic whole-job
+    `ComputeNode` configured by `scheme`. Alternatively `node_factory`
+    supplies any `ComputeNodeProtocol` implementation (e.g. a configured
+    `repro.batching.BatchedComputeNode`); exactly one must be given.
     """
+    if (service_time is None) == (node_factory is None):
+        raise ValueError("pass exactly one of service_time / node_factory")
     rng = np.random.default_rng(sim.seed)
-    node = ComputeNode(
-        service_time,
-        policy=scheme.compute_policy,
-        drop_infeasible=scheme.drop_infeasible,
-        comp_budget=scheme.b_comp if scheme.management == "disjoint" else None,
-    )
+    if node_factory is not None:
+        node = node_factory()
+    else:
+        node = ComputeNode(
+            service_time,
+            policy=scheme.compute_policy,
+            drop_infeasible=scheme.drop_infeasible,
+            comp_budget=scheme.b_comp if scheme.management == "disjoint" else None,
+        )
     engine = SlotEngine(
         sim,
         rng,

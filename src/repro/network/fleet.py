@@ -25,7 +25,7 @@ from ..core.latency_model import (
     LatencyModel,
     ModelProfile,
 )
-from ..core.scheduler import ComputeNode, Job
+from ..core.scheduler import ComputeNode, ComputeNodeProtocol, Job
 
 __all__ = ["GPU_SPECS", "FleetNode", "build_fleet_node"]
 
@@ -42,7 +42,7 @@ class FleetNode:
     kind: str  # "ran" | "mec"
     site: Optional[int]  # owning cell index for RAN nodes, None for MEC
     lm: LatencyModel
-    node: ComputeNode
+    node: ComputeNodeProtocol  # classic ComputeNode or BatchedComputeNode
     # jobs routed here but still riding the wireline/backhaul: invisible to
     # the ComputeNode queue, so routing tracks them explicitly — otherwise
     # every job deciding during a node's backhaul window sees the same
@@ -80,18 +80,38 @@ def build_fleet_node(
     model: ModelProfile = LLAMA2_7B,
     policy: str = "priority",
     drop_infeasible: bool = True,
+    node_kind: str = "classic",
+    max_batch: int = 8,
 ) -> FleetNode:
-    """Wire a ComputeNode to the LatencyModel of `n_devices` x `gpu`.
+    """Wire a compute node to the LatencyModel of `n_devices` x `gpu`.
 
     Defaults are the ICC joint-management stance: least-slack-first queue
     with deadline dropping (paper §IV-B) at every node in the fleet.
+    `node_kind="classic"` is the paper's whole-job single server (paper
+    fidelity, Eq. 7/8); `node_kind="batched"` is the token-granular
+    continuous-batching server (`repro.batching`), which needs the
+    extended-fidelity model for its batch/context-dependent iterations.
     """
     spec = GPU_SPECS[gpu] if isinstance(gpu, str) else gpu
     hw = spec.scaled(n_devices) if n_devices > 1 else spec
-    lm = LatencyModel(hw, model, fidelity="paper")
-    node = ComputeNode(
-        lambda j: lm.job_latency(j.n_input, j.n_output),
-        policy=policy,
-        drop_infeasible=drop_infeasible,
-    )
+    if node_kind == "classic":
+        lm = LatencyModel(hw, model, fidelity="paper")
+        node = ComputeNode(
+            lambda j: lm.job_latency(j.n_input, j.n_output),
+            policy=policy,
+            drop_infeasible=drop_infeasible,
+            deterministic_service=True,  # analytic model: O(1) routing queries
+        )
+    elif node_kind == "batched":
+        from ..batching import BatchedComputeNode
+
+        lm = LatencyModel(hw, model, fidelity="extended")
+        node = BatchedComputeNode(
+            lm,
+            max_batch=max_batch,
+            policy=policy,
+            drop_infeasible=drop_infeasible,
+        )
+    else:
+        raise ValueError(f"unknown node_kind {node_kind!r}")
     return FleetNode(name=name, kind=kind, site=site, lm=lm, node=node)

@@ -53,6 +53,20 @@ SCENARIOS: Dict[str, Scenario] = {
             lam_per_ue=0.5,
             bytes_per_token=512.0,
         ),
+        Scenario(
+            name="rag_doc_qa",
+            description=(
+                "RAG document QA: the retrieved context is edge-resident, so "
+                "only the short query rides the uplink, but the full 2k-token "
+                "context is prefilled and held in KV cache — the workload "
+                "where cache pressure, not compute, caps batched serving"
+            ),
+            n_input=2048,
+            n_output=32,
+            b_total=4.0,
+            lam_per_ue=0.25,
+            bytes_per_token=16.0,  # query text only; context joins at the edge
+        ),
     )
 }
 

@@ -35,6 +35,10 @@ class NetSimConfig:
     sim_time: float = 10.0
     warmup: float = 2.0
     seed: int = 0
+    # compute-fleet node type: "classic" (paper, whole-job) or "batched"
+    # (repro.batching token-granular continuous batching)
+    node_kind: str = "classic"
+    max_batch: int = 8
 
 
 @dataclasses.dataclass
@@ -86,7 +90,10 @@ def simulate_network(
 ) -> NetResult:
     """Run one multi-cell simulation under `policy` and score Def. 1."""
     sc = cfg.scenario
-    topo = Topology(cfg.topology, model=cfg.model)
+    topo = Topology(
+        cfg.topology, model=cfg.model,
+        node_kind=cfg.node_kind, max_batch=cfg.max_batch,
+    )
     pol = get_policy(policy).bind(topo)
     uid = itertools.count()  # fleet-wide unique job ids
 

@@ -73,7 +73,13 @@ class Topology:
 
     MEC = "mec"
 
-    def __init__(self, cfg: TopologyConfig, model: ModelProfile = LLAMA2_7B):
+    def __init__(
+        self,
+        cfg: TopologyConfig,
+        model: ModelProfile = LLAMA2_7B,
+        node_kind: str = "classic",
+        max_batch: int = 8,
+    ):
         names = [s.name for s in cfg.sites]
         if len(set(names)) != len(names):
             raise ValueError(
@@ -83,7 +89,8 @@ class Topology:
         self.cfg = cfg
         self.nodes: Dict[str, FleetNode] = {
             self.MEC: build_fleet_node(
-                self.MEC, "mec", cfg.mec_gpu, cfg.mec_gpu_count, model=model
+                self.MEC, "mec", cfg.mec_gpu, cfg.mec_gpu_count, model=model,
+                node_kind=node_kind, max_batch=max_batch,
             )
         }
         # ran_of[i] = name of site i's RAN node, or None
@@ -94,7 +101,8 @@ class Topology:
                 continue
             name = f"ran:{site.name}"
             self.nodes[name] = build_fleet_node(
-                name, "ran", site.ran_gpu, site.ran_gpu_count, site=i, model=model
+                name, "ran", site.ran_gpu, site.ran_gpu_count, site=i,
+                model=model, node_kind=node_kind, max_batch=max_batch,
             )
             self.ran_of.append(name)
 

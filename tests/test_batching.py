@@ -1,0 +1,424 @@
+"""Token-level continuous-batching subsystem + node protocol.
+
+Covers the ISSUE-2 acceptance points: `BatchedComputeNode(max_batch=1,
+chunked_prefill=False)` reproduces `ComputeNode` completion times exactly,
+KV admission never exceeds `HardwareSpec.hbm_bytes`, and the closed-form
+`_ext_decode` matches the per-token reference loop.
+"""
+
+import copy
+import math
+
+import numpy as np
+import pytest
+
+from repro.batching import BatchedComputeNode, BatchStats, KVCache
+from repro.core.channel import ChannelConfig
+from repro.core.latency_model import (
+    A100,
+    L4,
+    LLAMA2_7B,
+    HardwareSpec,
+    LatencyModel,
+    ModelProfile,
+)
+from repro.core.scheduler import ComputeNode, ComputeNodeProtocol, Job
+from repro.core.simulator import SchemeConfig, SimConfig, simulate
+
+ICC = SchemeConfig("icc", 0.005, True, "priority", "joint")
+
+
+def mk_job(uid, t_gen=0.0, t_arr=None, n_in=16, n_out=8, b_total=100.0):
+    j = Job(uid=uid, ue=0, t_gen=t_gen, n_input=n_in, n_output=n_out,
+            b_total=b_total)
+    j.t_compute_arrival = t_gen + 0.005 if t_arr is None else t_arr
+    return j
+
+
+def poisson_stream(seed, n=120, lam=20.0, b_total=2.0):
+    rng = np.random.default_rng(seed)
+    t, jobs = 0.0, []
+    for i in range(n):
+        t += rng.exponential(1.0 / lam)
+        jobs.append(mk_job(i, t_gen=t, n_in=int(rng.integers(8, 64)),
+                           n_out=int(rng.integers(4, 48)), b_total=b_total))
+    return jobs
+
+
+class TestKVCache:
+    def test_reservation_accounting(self):
+        kv = KVCache(A100, LLAMA2_7B)
+        job = mk_job(0, n_in=100, n_out=28)
+        assert kv.job_bytes(job) == pytest.approx(
+            128 * LLAMA2_7B.kv_bytes_per_token
+        )
+        assert kv.capacity_bytes == pytest.approx(
+            A100.hbm_bytes - LLAMA2_7B.model_bytes
+        )
+        kv.admit(job)
+        assert kv.used_bytes == kv.job_bytes(job)
+        kv.release(job)
+        assert kv.used_bytes == 0.0
+        assert kv.peak_bytes == kv.job_bytes(job)
+
+    def test_weights_must_fit(self):
+        tiny = HardwareSpec("tiny", flops=1e12, hbm_bw=1e11, hbm_bytes=1e9)
+        with pytest.raises(ValueError, match="do not fit"):
+            KVCache(tiny, LLAMA2_7B)
+
+    def test_l4_cache_holds_nine_rag_jobs(self):
+        # the benchmark's headline number: 10 GB KV pool / 2080-token jobs
+        kv = KVCache(L4, LLAMA2_7B)
+        assert kv.jobs_capacity(mk_job(0, n_in=2048, n_out=32)) == 9
+
+    def test_overflow_raises(self):
+        kv = KVCache(L4, LLAMA2_7B)
+        big = mk_job(0, n_in=10_000, n_out=0)
+        kv.admit(big)
+        with pytest.raises(RuntimeError, match="overflow"):
+            kv.admit(mk_job(1, n_in=10_000, n_out=0))
+
+
+class TestNodeProtocol:
+    def test_both_nodes_satisfy_protocol(self):
+        classic = ComputeNode(lambda j: 0.01)
+        batched = BatchedComputeNode(
+            LatencyModel(A100, LLAMA2_7B, fidelity="extended")
+        )
+        assert isinstance(classic, ComputeNodeProtocol)
+        assert isinstance(batched, ComputeNodeProtocol)
+
+    def test_len_and_pending(self):
+        node = BatchedComputeNode(
+            LatencyModel(A100, LLAMA2_7B, fidelity="extended"), max_batch=2
+        )
+        for i in range(4):
+            node.submit(mk_job(i))
+        assert len(node) == 4
+        assert sorted(j.uid for j in node.pending_jobs()) == [0, 1, 2, 3]
+        node.run_until(0.01)  # first iteration admits up to max_batch
+        assert len(node.pending_jobs()) == 2
+        assert len(node) == 4  # running jobs still count toward load
+        node.run_until(math.inf)
+        assert len(node) == 0 and len(node.completed) == 4
+
+    def test_estimated_free_at_reflects_load(self):
+        lm = LatencyModel(A100, LLAMA2_7B, fidelity="extended")
+        node = BatchedComputeNode(lm, max_batch=2)
+        idle = node.estimated_free_at(0.0)
+        assert idle == 0.0
+        for i in range(6):
+            node.submit(mk_job(i))
+        assert node.estimated_free_at(0.0) > idle
+        node.run_until(math.inf)
+        assert node.estimated_free_at(node.busy_until) == pytest.approx(
+            node.busy_until
+        )
+
+
+@pytest.mark.parametrize("fidelity", ["paper", "extended"])
+@pytest.mark.parametrize("policy", ["fifo", "priority"])
+@pytest.mark.parametrize("drop", [False, True])
+class TestMaxBatchOneEquivalence:
+    """Acceptance: max_batch=1 + whole-prompt prefill == ComputeNode."""
+
+    def test_identical_completions_and_drops(self, fidelity, policy, drop):
+        lm = LatencyModel(A100, LLAMA2_7B, fidelity=fidelity)
+        jobs = poisson_stream(seed=7)
+        ja, jb = copy.deepcopy(jobs), copy.deepcopy(jobs)
+        classic = ComputeNode(
+            lambda j: lm.job_latency(j.n_input, j.n_output),
+            policy=policy, drop_infeasible=drop,
+        )
+        batched = BatchedComputeNode(
+            lm, max_batch=1, policy=policy, drop_infeasible=drop,
+            chunked_prefill=False,
+        )
+        for j in ja:
+            classic.submit(j)
+        for j in jb:
+            batched.submit(j)
+        # slot-stepped like the simulator, then drain
+        for s in range(1, 1500):
+            classic.run_until(s * 0.01)
+            batched.run_until(s * 0.01)
+        classic.run_until(math.inf)
+        batched.run_until(math.inf)
+
+        assert [j.uid for j in classic.completed] == [
+            j.uid for j in batched.completed
+        ]
+        for a, b in zip(classic.completed, batched.completed):
+            assert b.t_complete == pytest.approx(a.t_complete, rel=1e-9)
+        assert [j.uid for j in classic.dropped] == [
+            j.uid for j in batched.dropped
+        ]
+
+
+class TestKVAdmissionNeverExceedsHBM:
+    # small pool: 1 GB HBM, 0.5 GB weights -> a handful of jobs fit
+    HW = HardwareSpec("edge-sim", flops=50e12, hbm_bw=200e9, hbm_bytes=1e9)
+    MODEL = ModelProfile(
+        name="m", n_params=0.25e9, n_active_params=0.25e9, bytes_per_param=2.0,
+        kv_bytes_per_token=0.5e6, state_bytes=1e6,
+    )
+
+    @pytest.mark.parametrize("max_batch", [1, 3, 8, 32])
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_peak_usage_bounded(self, max_batch, seed):
+        lm = LatencyModel(self.HW, self.MODEL, fidelity="extended")
+        node = BatchedComputeNode(lm, max_batch=max_batch)
+        rng = np.random.default_rng(seed)
+        t = 0.0
+        for i in range(60):
+            t += rng.exponential(0.02)
+            node.submit(mk_job(i, t_gen=t, n_in=int(rng.integers(16, 600)),
+                               n_out=int(rng.integers(4, 64))))
+            node.run_until(t)  # interleave to stress admission
+        node.run_until(math.inf)
+        stats = node.stats
+        assert stats.peak_kv_bytes <= node.kv.capacity_bytes
+        assert (
+            stats.peak_kv_bytes + self.MODEL.model_bytes <= self.HW.hbm_bytes
+        )
+        assert len(node.completed) + len(node.dropped) == 60
+        assert node.kv.used_bytes == 0.0  # all reservations returned
+
+    def test_unservable_job_dropped_not_stuck(self):
+        lm = LatencyModel(self.HW, self.MODEL, fidelity="extended")
+        node = BatchedComputeNode(lm, max_batch=4)
+        node.submit(mk_job(0, n_in=2000, n_out=8))  # > 1 GB of KV alone
+        node.submit(mk_job(1, n_in=32, n_out=8))
+        node.run_until(math.inf)
+        assert [j.uid for j in node.dropped] == [0]
+        assert [j.uid for j in node.completed] == [1]
+
+    def test_cache_binds_before_max_batch(self):
+        lm = LatencyModel(self.HW, self.MODEL, fidelity="extended")
+        node = BatchedComputeNode(lm, max_batch=32)
+        cap = node.kv.jobs_capacity(mk_job(0, n_in=100, n_out=28))
+        assert cap < 32
+        for i in range(40):
+            node.submit(mk_job(i, n_in=100, n_out=28))
+        node.run_until(math.inf)
+        assert node.stats.peak_batch == cap
+        assert node.stats.kv_blocked_iterations > 0
+
+
+class TestBatchingBehaviour:
+    LM = LatencyModel(A100, LLAMA2_7B, fidelity="extended")
+
+    def backlog(self, mb, n=16, **kw):
+        node = BatchedComputeNode(self.LM, max_batch=mb, **kw)
+        for i in range(n):
+            node.submit(mk_job(i, n_in=512, n_out=32, t_arr=0.0))
+        node.run_until(math.inf)
+        return node
+
+    def test_batching_raises_throughput(self):
+        t1 = self.backlog(1).busy_until
+        t8 = self.backlog(8).busy_until
+        assert t8 < 0.5 * t1  # memory-bound decode: batching is nearly free
+
+    def test_ttft_tbt_recorded_and_ordered(self):
+        node = self.backlog(4)
+        for j in node.completed:
+            assert j.t_compute_arrival <= j.t_first_token < j.t_complete
+            tbt = (j.t_complete - j.t_first_token) / (j.n_output - 1)
+            assert tbt > 0
+
+    def test_deadline_preemption_at_token_granularity(self):
+        # deadlines sized for solo service: under a 16-deep batch the decode
+        # slows enough that some admitted jobs get preempted mid-generation
+        solo = self.LM.job_latency(512, 32)
+        node = BatchedComputeNode(self.LM, max_batch=16, drop_infeasible=True)
+        for i in range(16):
+            j = mk_job(i, n_in=512, n_out=32, t_arr=0.0, b_total=1.35 * solo)
+            node.submit(j)
+        node.run_until(math.inf)
+        assert node.stats.preempted > 0
+        assert len(node.completed) + len(node.dropped) == 16
+        assert node.kv.used_bytes == 0.0  # preempted KV reservations freed
+
+    def test_chunked_prefill_interleaves_decode(self):
+        # with chunking, a later arrival's prefill shares iterations with the
+        # first job's decode instead of waiting for it to finish
+        node = BatchedComputeNode(self.LM, max_batch=4, prefill_chunk=128)
+        node.submit(mk_job(0, n_in=512, n_out=64, t_arr=0.0))
+        node.run_until(1e-6)  # start job 0
+        node.submit(mk_job(1, n_in=512, n_out=4, t_arr=0.0))
+        node.run_until(math.inf)
+        j0, j1 = sorted(node.completed, key=lambda j: j.uid)
+        assert j1.t_first_token < j0.t_complete  # overlapped, not serialized
+
+    def test_invalid_max_batch(self):
+        with pytest.raises(ValueError, match="max_batch"):
+            BatchedComputeNode(self.LM, max_batch=0)
+        with pytest.raises(ValueError, match="prefill_chunk"):
+            BatchedComputeNode(self.LM, prefill_chunk=0)
+
+    def test_zero_output_job_is_prefill_only(self):
+        # no phantom decode token: completion == ComputeNode's prefill-only
+        # latency, and t_first_token stays unstamped
+        node = BatchedComputeNode(self.LM, max_batch=1, chunked_prefill=False)
+        j = mk_job(0, n_in=512, n_out=0, t_arr=0.0)
+        node.submit(j)
+        node.run_until(math.inf)
+        assert node.completed == [j]
+        assert j.t_complete == pytest.approx(self.LM.job_latency(512, 0))
+        assert math.isnan(j.t_first_token)
+        assert node.stats.decode_token_iterations == 0
+
+    def test_estimated_free_at_counts_prefill_in_chunks(self):
+        # a full batch mid-prefill frees a slot after ~chunks+decodes
+        # iterations, not one iteration per remaining prompt token
+        node = BatchedComputeNode(self.LM, max_batch=1, prefill_chunk=256)
+        node.submit(mk_job(0, n_in=2048, n_out=32, t_arr=0.0))
+        node.run_until(1e-9)  # one 256-token chunk done, batch is full
+        est = node.estimated_free_at(0.0)
+        step = self.LM.iteration_latency(0, 1, 2048)
+        assert est <= node.busy_until + (7 + 32) * 1.5 * step  # iters, not tokens
+
+
+class TestSimulateIntegration:
+    def _sim(self, **kw):
+        kw.setdefault("n_ues", 8)
+        kw.setdefault("sim_time", 4.0)
+        kw.setdefault("warmup", 0.5)
+        kw.setdefault("b_total", 0.5)
+        kw.setdefault("n_input", 64)
+        kw.setdefault("n_output", 16)
+        return SimConfig(**kw)
+
+    def test_requires_exactly_one_engine(self):
+        with pytest.raises(ValueError, match="exactly one"):
+            simulate(ICC, self._sim())
+        with pytest.raises(ValueError, match="exactly one"):
+            simulate(ICC, self._sim(), lambda j: 0.01,
+                     node_factory=lambda: ComputeNode(lambda j: 0.01))
+
+    def test_batched_node_in_single_cell_sim(self):
+        lm = LatencyModel(A100, LLAMA2_7B, fidelity="extended")
+        r = simulate(ICC, self._sim(), node_factory=lambda: BatchedComputeNode(
+            lm, max_batch=8, policy="priority", drop_infeasible=True))
+        assert r.n_jobs > 0
+        assert r.avg_ttft is not None and r.avg_tbt is not None
+        assert r.avg_ttft <= r.avg_e2e
+        assert r.p95_ttft <= r.p99_ttft
+        assert r.p95_e2e <= r.p99_e2e
+
+    def test_classic_node_has_no_token_metrics(self):
+        r = simulate(ICC, self._sim(),
+                     lambda j: 0.001 * (j.n_input + j.n_output))
+        assert r.avg_ttft is None and r.avg_tbt is None
+        assert r.p95_e2e is not None  # e2e percentiles exist for both kinds
+
+    def test_deterministic_same_seed(self):
+        lm = LatencyModel(A100, LLAMA2_7B, fidelity="extended")
+        mk = lambda: simulate(
+            ICC, self._sim(seed=5),
+            node_factory=lambda: BatchedComputeNode(lm, max_batch=4))
+        assert mk() == mk()
+
+
+class TestDeterministicServiceCache:
+    """ROADMAP item: O(1) `estimated_free_at` via an incremental queued-work
+    sum, without touching dispatch-time RNG draws for stochastic nodes."""
+
+    def test_cached_estimate_matches_rescan(self):
+        svc = lambda j: 0.001 * (j.n_input + j.n_output)
+        plain = ComputeNode(svc, policy="priority")
+        cached = ComputeNode(svc, policy="priority", deterministic_service=True)
+        jobs = poisson_stream(seed=3, n=60)
+        for step, j in enumerate(jobs):
+            plain.submit(copy.deepcopy(j))
+            cached.submit(copy.deepcopy(j))
+            now = j.t_compute_arrival
+            assert cached.estimated_free_at(now) == pytest.approx(
+                plain.estimated_free_at(now)
+            )
+            if step % 5 == 0:  # invalidate via dispatch too
+                plain.run_until(now)
+                cached.run_until(now)
+                assert cached.estimated_free_at(now) == pytest.approx(
+                    plain.estimated_free_at(now)
+                )
+        plain.run_until(math.inf)
+        cached.run_until(math.inf)
+        assert [j.t_complete for j in cached.completed] == pytest.approx(
+            [j.t_complete for j in plain.completed]
+        )
+        assert cached._queued_work == pytest.approx(0.0)
+        assert cached._svc_cache == {}
+
+    def test_cache_invalidated_on_drop(self):
+        cached = ComputeNode(lambda j: 0.5, policy="priority",
+                             drop_infeasible=True, deterministic_service=True)
+        cached.submit(mk_job(0, b_total=0.08))  # infeasible: 0.5 s service
+        assert cached.estimated_free_at(0.0) == pytest.approx(0.5)
+        cached.run_until(math.inf)
+        assert cached.dropped and cached._queued_work == pytest.approx(0.0)
+
+    def test_stochastic_nodes_keep_dispatch_time_draws(self):
+        # default (non-deterministic) path must not consume RNG at submit
+        rng = np.random.default_rng(0)
+        draws = []
+        def svc(job):
+            draws.append(rng.exponential(0.01))
+            return draws[-1]
+        node = ComputeNode(svc)
+        node.submit(mk_job(0))
+        node.submit(mk_job(1))
+        assert draws == []  # nothing drawn yet
+        node.run_until(math.inf)
+        assert len(draws) == 2  # exactly one draw per dispatch
+
+
+class TestExtDecodeClosedForm:
+    """Satellite: closed-form `_ext_decode` == the per-token reference loop."""
+
+    @staticmethod
+    def reference_loop(lm, n_output, context, batch):
+        t = 0.0
+        for i in range(n_output):
+            ctx = context + i
+            c = batch * lm.model.flops_per_token
+            mem = lm.model.model_bytes + batch * (
+                ctx * lm.model.kv_bytes_per_token + lm.model.state_bytes
+            )
+            t += (
+                max(c / lm.hw.flops, mem / lm.hw.hbm_bw)
+                + batch * lm._collective_per_token()
+            )
+        return t
+
+    @pytest.mark.parametrize("hw", [A100, L4], ids=lambda h: h.name)
+    @pytest.mark.parametrize("batch", [1, 4, 16])
+    @pytest.mark.parametrize("n_output,context", [
+        (1, 0), (7, 15), (32, 2048), (501, 0), (128, 100_000),
+    ])
+    def test_matches_loop(self, hw, batch, n_output, context):
+        for tp in (1, 4):
+            lm = LatencyModel(hw, LLAMA2_7B, fidelity="extended", tp_degree=tp)
+            assert lm._ext_decode(n_output, context, batch) == pytest.approx(
+                self.reference_loop(lm, n_output, context, batch), rel=1e-9
+            )
+
+    def test_zero_kv_growth_branch(self):
+        ssm = ModelProfile(name="ssm", n_params=1e9, n_active_params=1e9,
+                           bytes_per_param=2.0, kv_bytes_per_token=0.0,
+                           state_bytes=1e6)
+        lm = LatencyModel(A100, ssm, fidelity="extended")
+        assert lm._ext_decode(100, 50, 4) == pytest.approx(
+            self.reference_loop(lm, 100, 50, 4), rel=1e-12
+        )
+
+    def test_long_decode_is_constant_time(self):
+        # 500k-token decode: the closed form must not iterate per token
+        import time
+
+        lm = LatencyModel(A100, LLAMA2_7B, fidelity="extended")
+        t0 = time.perf_counter()
+        v = lm.decode_latency(500_000, context=24_000)
+        assert time.perf_counter() - t0 < 0.01
+        assert v > 0

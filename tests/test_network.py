@@ -233,6 +233,52 @@ class TestNetworkSimulation:
         assert caps["slack_aware"] >= caps["mec_only"]
 
 
+class TestBatchedFleet:
+    """The fleet accepts either node type via ComputeNodeProtocol."""
+
+    def _cfg(self, **kw):
+        kw.setdefault("topology", tiny_topology())
+        kw.setdefault("sim_time", 3.0)
+        kw.setdefault("warmup", 0.5)
+        kw.setdefault("node_kind", "batched")
+        kw.setdefault("max_batch", 4)
+        return NetSimConfig(**kw)
+
+    def test_topology_builds_batched_nodes(self):
+        from repro.batching import BatchedComputeNode
+
+        topo = Topology(tiny_topology(), node_kind="batched", max_batch=4)
+        for fn in topo.nodes.values():
+            assert isinstance(fn.node, BatchedComputeNode)
+            assert fn.node.max_batch == 4
+            assert fn.lm.fidelity == "extended"
+
+    def test_unknown_node_kind_rejected(self):
+        from repro.network.fleet import build_fleet_node
+
+        with pytest.raises(ValueError, match="node_kind"):
+            build_fleet_node("x", "ran", "h100", node_kind="nope")
+
+    def test_batched_network_sim_runs_and_is_deterministic(self):
+        a = simulate_network(self._cfg(seed=3), "slack_aware")
+        b = simulate_network(self._cfg(seed=3), "slack_aware")
+        assert a.total == b.total
+        assert a.route_share == b.route_share
+        assert a.n_jobs > 0
+        # token-granular nodes surface TTFT/TBT through Def.-1 scoring
+        assert a.total.avg_ttft is not None
+        assert a.total.avg_tbt is not None
+
+    def test_classic_results_untouched_by_node_kind_knob(self):
+        # fixed seed, default knob vs explicit classic: identical results
+        base = NetSimConfig(topology=tiny_topology(), sim_time=3.0,
+                            warmup=0.5, seed=3)
+        explicit = dataclasses.replace(base, node_kind="classic")
+        ra = simulate_network(base, "slack_aware")
+        rb = simulate_network(explicit, "slack_aware")
+        assert ra.total == rb.total and ra.route_share == rb.route_share
+
+
 class TestGpuSpecs:
     def test_registry_names_match(self):
         for name, spec in GPU_SPECS.items():
