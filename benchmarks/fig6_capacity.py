@@ -14,14 +14,13 @@ import os
 from typing import Optional, Sequence
 
 from repro.core.capacity import capacity_from_sweep, sweep
-from repro.core.latency_model import GH200_NVL2, LLAMA2_7B, LatencyModel
+from repro.core.latency_model import GH200_NVL2, LLAMA2_7B, ModelService
 from repro.core.simulator import SCHEMES, SimConfig
 
 
 def service_time_fn(n_gpu_pairs: float = 1.0):
-    hw = GH200_NVL2.scaled(2)  # paper: two GH200-NVL2
-    lm = LatencyModel(hw, LLAMA2_7B, fidelity="paper")
-    return lambda job: lm.job_latency(job.n_input, job.n_output)
+    # picklable (ModelService) so `workers=` can fan the sweep out
+    return ModelService(GH200_NVL2.scaled(2), LLAMA2_7B)  # paper: 2x GH200
 
 
 def run(
@@ -29,13 +28,15 @@ def run(
     rates: Optional[Sequence[float]] = None,
     sim_time: float = 30.0,
     n_seeds: int = 3,
+    workers: int = 0,
 ) -> dict:
     rates = list(rates or range(10, 105, 10))
     base = SimConfig(sim_time=sim_time)
     svc = service_time_fn()
     out = {"rates": rates, "schemes": {}}
     for name, scheme in SCHEMES.items():
-        results = sweep(scheme, base, rates, svc, n_seeds=n_seeds)
+        results = sweep(scheme, base, rates, svc, n_seeds=n_seeds,
+                        workers=workers)
         cap = capacity_from_sweep(rates, results, alpha=0.95)
         out["schemes"][name] = {
             "satisfaction": [r.satisfaction for r in results],

@@ -14,8 +14,17 @@ from typing import Optional, Sequence
 
 import numpy as np
 
-from repro.core.latency_model import A100, LLAMA2_7B, LatencyModel
+from repro.core.latency_model import A100, LLAMA2_7B, ModelService
+from repro.core.parallel import parallel_map
 from repro.core.simulator import SCHEMES, SimConfig, simulate
+
+
+def _point(scheme, n_gpus: int, seed: int, sim_time: float):
+    svc = ModelService(A100.scaled(n_gpus), LLAMA2_7B)
+    r = simulate(
+        scheme, SimConfig(n_ues=60, sim_time=sim_time, seed=seed * 1000), svc
+    )
+    return r.satisfaction, r.avg_tokens_per_s
 
 
 def run(
@@ -23,26 +32,26 @@ def run(
     gpu_counts: Optional[Sequence[int]] = None,
     sim_time: float = 30.0,
     n_seeds: int = 3,
+    workers: int = 0,
 ) -> dict:
     gpu_counts = list(gpu_counts or range(2, 17))
     out = {"gpus": gpu_counts, "schemes": {}}
     min_gpus = {}
-    for name, scheme in SCHEMES.items():
+    # flat scheme x gpu-count x seed grid through the pool
+    tasks = [
+        (scheme, n, seed, sim_time)
+        for scheme in SCHEMES.values() for n in gpu_counts
+        for seed in range(n_seeds)
+    ]
+    flat = parallel_map(_point, tasks, workers=workers)
+    per_scheme = len(gpu_counts) * n_seeds
+    for k, name in enumerate(SCHEMES):
+        block = flat[k * per_scheme:(k + 1) * per_scheme]
         sats, tps = [], []
-        for n in gpu_counts:
-            lm = LatencyModel(A100.scaled(n), LLAMA2_7B, fidelity="paper")
-            svc = lambda job: lm.job_latency(job.n_input, job.n_output)
-            s, t = [], []
-            for seed in range(n_seeds):
-                r = simulate(
-                    scheme,
-                    SimConfig(n_ues=60, sim_time=sim_time, seed=seed * 1000),
-                    svc,
-                )
-                s.append(r.satisfaction)
-                t.append(r.avg_tokens_per_s)
-            sats.append(float(np.mean(s)))
-            tps.append(float(np.nanmean(t)))
+        for i, n in enumerate(gpu_counts):
+            pts = block[i * n_seeds:(i + 1) * n_seeds]
+            sats.append(float(np.mean([p[0] for p in pts])))
+            tps.append(float(np.nanmean([p[1] for p in pts])))
         out["schemes"][name] = {"satisfaction": sats, "tokens_per_s": tps}
         reach = [n for n, s in zip(gpu_counts, sats) if s >= 0.95]
         min_gpus[name] = min(reach) if reach else None

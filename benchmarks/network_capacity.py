@@ -6,6 +6,11 @@ pooled GH200 MEC) for every routing policy, and reads off Def.-2 capacity
 at alpha = 95 %. Also enumerates the scenario registry at a fixed load so
 every workload (not just Table I) exercises the fleet.
 
+The whole policy x rate x seed grid is one flat task list fanned out over a
+process pool (``--workers``, default one per CPU; ``--workers 1`` forces
+the serial path). Every point keeps its serial-derived seed, so the
+capacity numbers are identical either way.
+
 Outputs:
   benchmarks/results/network_capacity.json   full curves + per-scenario sat
   BENCH_network.json (repo root)             capacity per policy + sweep
@@ -14,12 +19,16 @@ Outputs:
 
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import time
 from typing import Dict, Optional, Sequence
 
-from repro.core.capacity import capacity_from_sweep, network_sweep
+import numpy as np
+
+from repro.core.capacity import capacity_from_sweep, network_point
+from repro.core.parallel import parallel_map
 from repro.network import (
     POLICIES,
     SCENARIOS,
@@ -32,6 +41,11 @@ from repro.network import (
 SCENARIO_LOADS: Dict[str, float] = {"chatbot": 20.0, "vision_prompt": 15.0}
 
 
+def _scenario_point(topo, scenario, load, sim_time, warmup, policy):
+    cfg = config_for_load(topo, scenario, load, sim_time=sim_time, warmup=warmup)
+    return simulate_network(cfg, policy).satisfaction
+
+
 def run(
     out_dir: str = "benchmarks/results",
     results_name: str = "network_capacity.json",
@@ -39,13 +53,18 @@ def run(
     rates: Optional[Sequence[float]] = None,
     sim_time: float = 6.0,
     warmup: float = 1.0,
-    n_seeds: int = 2,
+    # the fast core bought a denser default grid: 10-jobs/s rate steps and
+    # 3 seeds (pre-optimization baseline: 20-step, 2 seeds, 117 s serial)
+    n_seeds: int = 3,
     alpha: float = 0.95,
     scenario_loads: Optional[Dict[str, float]] = None,
+    workers: int = 0,
 ) -> dict:
-    rates = list(rates or range(30, 191, 20))
+    rates = list(rates or range(30, 191, 10))
     scenario_loads = SCENARIO_LOADS if scenario_loads is None else scenario_loads
     topo = three_cell_hetero()
+    scenario = SCENARIOS["ar_translation"]
+    policies = sorted(POLICIES)
     out = {
         "rates": rates,
         "alpha": alpha,
@@ -57,19 +76,26 @@ def run(
     }
 
     t_sweep = time.perf_counter()
-    for name in sorted(POLICIES):
-        t0 = time.perf_counter()
-        curve = network_sweep(
-            topo, name, rates, sim_time=sim_time, warmup=warmup,
-            n_seeds=n_seeds,
-        )
+    # one flat policy x rate x seed grid through the pool
+    tasks = [
+        (topo, scenario, pol, sim_time, warmup, 0, True, float(lam), s)
+        for pol in policies for lam in rates for s in range(n_seeds)
+    ]
+    flat = parallel_map(network_point, tasks, workers=workers)
+    per_policy = len(rates) * n_seeds
+    for p_idx, name in enumerate(policies):
+        block = flat[p_idx * per_policy:(p_idx + 1) * per_policy]
+        curve = [
+            float(np.mean([r.satisfaction
+                           for r in block[i * n_seeds:(i + 1) * n_seeds]]))
+            for i in range(len(rates))
+        ]
         cap = capacity_from_sweep(rates, curve, alpha=alpha)
         saturated = all(s >= alpha for s in curve)  # never crossed: lower bound
         out["policies"][name] = {
             "satisfaction": [round(s, 4) for s in curve],
             "capacity": cap,
             "saturated": saturated,
-            "wall_clock_s": round(time.perf_counter() - t0, 2),
         }
         mark = ">=" if saturated else "  "
         print(f"[network] {name:13s} capacity{mark}{cap:6.1f} jobs/s  "
@@ -77,15 +103,16 @@ def run(
     out["sweep_wall_clock_s"] = round(time.perf_counter() - t_sweep, 2)
 
     # one fixed-load pass per non-default scenario, every policy
-    for sc_name, load in scenario_loads.items():
-        sc = SCENARIOS[sc_name]
-        cfg = config_for_load(topo, sc, load, sim_time=sim_time, warmup=warmup)
+    sc_tasks = [
+        (topo, SCENARIOS[sc_name], load, sim_time, warmup, pol)
+        for sc_name, load in scenario_loads.items() for pol in policies
+    ]
+    sc_flat = parallel_map(_scenario_point, sc_tasks, workers=workers)
+    for i, (sc_name, load) in enumerate(scenario_loads.items()):
+        sats = sc_flat[i * len(policies):(i + 1) * len(policies)]
         out["scenarios"][sc_name] = {
             "load_jobs_per_s": load,
-            "satisfaction": {
-                p: round(simulate_network(cfg, p).satisfaction, 4)
-                for p in sorted(POLICIES)
-            },
+            "satisfaction": {p: round(s, 4) for p, s in zip(policies, sats)},
         }
         print(f"[network] scenario {sc_name:14s} @ {load:.0f}/s: "
               f"{out['scenarios'][sc_name]['satisfaction']}")
@@ -123,4 +150,13 @@ def run(
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--workers", type=int, default=-1,
+                    help="sweep processes (-1 = one per CPU, 1 = serial)")
+    ap.add_argument("--seeds", type=int, default=None,
+                    help="override n_seeds for the capacity sweep")
+    args = ap.parse_args()
+    kw = {"workers": args.workers}
+    if args.seeds is not None:
+        kw["n_seeds"] = args.seeds
+    run(**kw)

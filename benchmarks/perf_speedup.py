@@ -1,0 +1,162 @@
+"""Simulation-core speedup measurement -> BENCH_perf.json (tracked).
+
+Re-runs the two tracked capacity sweeps (benchmarks/network_capacity.py,
+benchmarks/batching_capacity.py) at exactly the pre-PR settings and records
+their wall-clock against the pre-PR baselines, plus a same-process
+engine-only microbench (reference draw-per-slot engine vs the vectorized
+fast path, serial). Fixed-seed outputs of the fast engine are bit-identical
+to the reference engine (tests/test_fast_sim.py), so the speedup is pure
+wall-clock.
+
+Pre-PR baselines are the wall-clocks recorded in the tracked
+BENCH_network.json / BENCH_batching.json before this optimization landed
+(git history: "sweep_wall_clock_s": 117.25, "wall_clock_s": 650.7, both
+measured on the same 2-CPU container class that runs these benches).
+
+Also times the two --quick sweeps (the exact configs benchmarks/run.py uses
+in CI) and stores them as ``quick_ref_s`` — the reference that
+`benchmarks.run --quick` checks new runs against (>2x fails).
+
+Usage:  PYTHONPATH=src python -m benchmarks.perf_speedup [--skip-full]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+from repro.core.latency_model import GH200_NVL2, LLAMA2_7B, ModelService
+from repro.core.simulator import SCHEMES, SimConfig, simulate
+from repro.network import SCENARIOS, config_for_load, three_cell_hetero
+from repro.network.simulator import simulate_network
+
+OUT_PATH = "BENCH_perf.json"  # repo root, tracked
+
+# pre-PR wall-clocks of the tracked sweeps (see module docstring)
+PRE_PR = {
+    "network_sweep_s": 117.25,   # BENCH_network.json @ caed456
+    "batching_sweep_s": 650.7,   # BENCH_batching.json @ caed456
+}
+# the pre-PR tracked settings, reproduced exactly for the matched run
+MATCHED_NETWORK_KW = dict(rates=list(range(30, 191, 20)), sim_time=6.0,
+                          warmup=1.0, n_seeds=2)
+MATCHED_BATCHING_KW = dict(sim_time=30.0, warmup=2.0, n_seeds=2)
+# the CI --quick sweep configs: single source of truth, imported by
+# benchmarks/run.py so the quick_ref_s baselines always describe the same
+# workload the CI regression gate runs
+QUICK_NETWORK_KW = dict(rates=[40, 80, 120], sim_time=4.0, n_seeds=1,
+                        scenario_loads={})
+QUICK_BATCHING_KW = dict(gpus=("a100", "l4"), batches=(1, 8),
+                         rate_grids={"l4": (0.25, 1.0, 3.0),
+                                     "a100": (1.0, 3.0, 6.0, 10.0)},
+                         sim_time=12.0, warmup=1.0, n_seeds=1)
+
+
+def engine_microbench() -> dict:
+    """Reference vs fast engine, serial, same process (single-thread gain)."""
+    svc = ModelService(GH200_NVL2.scaled(2), LLAMA2_7B)
+    out = {}
+
+    cfg = SimConfig(n_ues=60, sim_time=15.0, seed=0)
+    t0 = time.perf_counter()
+    ref = simulate(SCHEMES["icc"], cfg, svc, fast=False)
+    t_ref = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    fast = simulate(SCHEMES["icc"], cfg, svc, fast=True)
+    t_fast = time.perf_counter() - t0
+    assert ref == fast, "fast engine diverged from reference"
+    out["single_cell_60ue"] = {
+        "reference_s": round(t_ref, 3), "fast_s": round(t_fast, 3),
+        "speedup": round(t_ref / t_fast, 2),
+    }
+
+    topo = three_cell_hetero()
+    ncfg = config_for_load(topo, SCENARIOS["ar_translation"], 70.0,
+                           sim_time=4.0, warmup=1.0, seed=0)
+    t0 = time.perf_counter()
+    ref = simulate_network(ncfg, "slack_aware", fast=False)
+    t_ref = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    fast = simulate_network(ncfg, "slack_aware", fast=True)
+    t_fast = time.perf_counter() - t0
+    assert ref.total == fast.total, "fast network engine diverged"
+    out["network_3cell_70jps"] = {
+        "reference_s": round(t_ref, 3), "fast_s": round(t_fast, 3),
+        "speedup": round(t_ref / t_fast, 2),
+    }
+    return out
+
+
+def run(skip_full: bool = False, workers: int = -1) -> dict:
+    from . import batching_capacity, network_capacity
+
+    out = {
+        "cpu_count": os.cpu_count(),
+        "workers": workers,
+        "pre_pr": PRE_PR,
+        "engine_microbench": engine_microbench(),
+    }
+    for k, v in out["engine_microbench"].items():
+        print(f"[perf] engine {k}: {v['reference_s']}s -> {v['fast_s']}s "
+              f"({v['speedup']}x, serial)")
+
+    if not skip_full:
+        # matched-settings re-runs of the tracked sweeps (results land in
+        # benchmarks/results/*_perf.json; the tracked BENCH_network.json /
+        # BENCH_batching.json baselines are produced by the full module
+        # runs and are not touched here)
+        rn = network_capacity.run(
+            results_name="network_capacity_perf.json",
+            bench_path="benchmarks/results/BENCH_network_perf.json",
+            scenario_loads={}, workers=workers, **MATCHED_NETWORK_KW,
+        )
+        rb = batching_capacity.run(
+            results_name="batching_capacity_perf.json",
+            bench_path="benchmarks/results/BENCH_batching_perf.json",
+            workers=workers, **MATCHED_BATCHING_KW,
+        )
+        out["matched"] = {
+            "network_sweep_s": rn["sweep_wall_clock_s"],
+            "batching_sweep_s": rb["wall_clock_s"],
+        }
+        out["speedup"] = {
+            "network": round(
+                PRE_PR["network_sweep_s"] / rn["sweep_wall_clock_s"], 2),
+            "batching": round(
+                PRE_PR["batching_sweep_s"] / rb["wall_clock_s"], 2),
+        }
+        print(f"[perf] network sweep {PRE_PR['network_sweep_s']}s -> "
+              f"{rn['sweep_wall_clock_s']}s ({out['speedup']['network']}x)")
+        print(f"[perf] batching sweep {PRE_PR['batching_sweep_s']}s -> "
+              f"{rb['wall_clock_s']}s ({out['speedup']['batching']}x)")
+
+    # quick-mode reference wall-clocks for the CI regression guard
+    t0 = time.perf_counter()
+    network_capacity.run(results_name="network_capacity_quick.json",
+                         bench_path="benchmarks/results/BENCH_network_quick.json",
+                         workers=workers, **QUICK_NETWORK_KW)
+    t_net = round(time.perf_counter() - t0, 2)
+    t0 = time.perf_counter()
+    batching_capacity.run(results_name="batching_capacity_quick.json",
+                          bench_path="benchmarks/results/BENCH_batching_quick.json",
+                          workers=workers, **QUICK_BATCHING_KW)
+    t_bat = round(time.perf_counter() - t0, 2)
+    out["quick_ref_s"] = {"network_quick_s": t_net, "batching_quick_s": t_bat}
+    print(f"[perf] quick refs: network {t_net}s, batching {t_bat}s")
+
+    with open(OUT_PATH, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"[perf] wrote {OUT_PATH}")
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--skip-full", action="store_true",
+                    help="only refresh engine microbench + quick refs")
+    ap.add_argument("--workers", type=int, default=-1,
+                    help="sweep processes (-1 = one per CPU, 1 = serial)")
+    args = ap.parse_args()
+    run(skip_full=args.skip_full, workers=args.workers)

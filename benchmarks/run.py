@@ -7,16 +7,58 @@ This runner uses reduced sweeps to stay fast while still validating every
 claim direction. ``--quick`` trims further (shorter sims, coarser grids)
 for the per-PR CI pass; every reduced output lands in
 ``benchmarks/results/*_quick.json`` so the tracked full-fidelity baselines
-(BENCH_network.json, BENCH_batching.json) are never clobbered.
+(BENCH_network.json, BENCH_batching.json) are never clobbered. In quick
+mode the two simulation sweeps are also wall-clocked into
+``benchmarks/results/BENCH_perf_quick.json`` and checked against the
+tracked ``BENCH_perf.json`` reference — a >2x regression (generous, to
+absorb runner noise) fails the run.
+
+``--workers N`` fans the sweep grids out over N processes (default: one
+per CPU; simulation results are identical to the serial path — every grid
+point keeps its derived seed).
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
+import time
+
+PERF_BASELINE = "BENCH_perf.json"  # repo root, tracked
+PERF_QUICK_OUT = "benchmarks/results/BENCH_perf_quick.json"
+PERF_REGRESSION_FACTOR = 2.0
 
 
-def main(quick: bool = False) -> None:
+def _check_perf_quick(timings: dict) -> int:
+    """Write quick wall-clocks; fail on a >2x regression vs the baseline."""
+    os.makedirs(os.path.dirname(PERF_QUICK_OUT), exist_ok=True)
+    with open(PERF_QUICK_OUT, "w") as f:
+        json.dump(timings, f, indent=1)
+    if not os.path.exists(PERF_BASELINE):
+        print(f"[perf] no {PERF_BASELINE} baseline; recording only")
+        return 0
+    with open(PERF_BASELINE) as f:
+        ref = json.load(f).get("quick_ref_s", {})
+    failures = []
+    for key, ref_s in ref.items():
+        got = timings.get(key)
+        if got is not None and got > PERF_REGRESSION_FACTOR * ref_s:
+            failures.append(f"{key}: {got:.1f}s > {PERF_REGRESSION_FACTOR:.0f}x "
+                            f"baseline {ref_s:.1f}s")
+    for key, ref_s in ref.items():
+        got = timings.get(key)
+        if got is not None:
+            print(f"[perf] quick {key}: {got:.1f}s (baseline {ref_s:.1f}s, "
+                  f"limit {PERF_REGRESSION_FACTOR * ref_s:.1f}s)")
+    if failures:
+        print("[perf] QUICK-BENCH REGRESSION: " + "; ".join(failures))
+        return 1
+    return 0
+
+
+def main(quick: bool = False, workers: int = -1) -> int:
     from . import (
         ablation_scheduler,
         fig4_queueing,
@@ -28,6 +70,7 @@ def main(quick: bool = False) -> None:
 
     rows = []
     sim_time = 8.0 if quick else 15.0
+    timings = {}
 
     r4 = fig4_queueing.run()
     rows.append(("fig4.capacity_joint_ran_per_s", r4["capacities"]["joint_ran"],
@@ -36,7 +79,8 @@ def main(quick: bool = False) -> None:
                  "paper: +0.98"))
 
     r6 = fig6_capacity.run(
-        rates=range(20, 105, 20 if quick else 10), sim_time=sim_time, n_seeds=2
+        rates=range(20, 105, 20 if quick else 10), sim_time=sim_time, n_seeds=2,
+        workers=workers,
     )
     rows.append(("fig6.capacity_icc_per_s", r6["schemes"]["icc"]["capacity"],
                  "paper: 80/s"))
@@ -45,14 +89,18 @@ def main(quick: bool = False) -> None:
     rows.append(("fig6.gain_icc_vs_mec", r6["gain_icc_vs_mec"], "paper: +0.60"))
 
     from . import network_capacity
+    from .perf_speedup import QUICK_BATCHING_KW, QUICK_NETWORK_KW
 
     # reduced sweep: keep the full-fidelity outputs of
     # `python -m benchmarks.network_capacity` (tracked BENCH_network.json
-    # baseline + results/network_capacity.json) intact.
-    rn = network_capacity.run(rates=[40, 80, 120], sim_time=4.0 if quick else 5.0,
-                              n_seeds=1, scenario_loads={},
-                              results_name="network_capacity_quick.json",
-                              bench_path="benchmarks/results/BENCH_network_quick.json")
+    # baseline + results/network_capacity.json) intact. Quick mode uses the
+    # exact configs perf_speedup timed into BENCH_perf.json quick_ref_s.
+    net_kw = dict(QUICK_NETWORK_KW) if quick else dict(QUICK_NETWORK_KW, sim_time=5.0)
+    t0 = time.perf_counter()
+    rn = network_capacity.run(results_name="network_capacity_quick.json",
+                              bench_path="benchmarks/results/BENCH_network_quick.json",
+                              workers=workers, **net_kw)
+    timings["network_quick_s"] = round(time.perf_counter() - t0, 2)
     for pol, res in sorted(rn["policies"].items()):
         note = "3-cell hetero fleet, jobs/s @ 95%"
         if res["saturated"]:
@@ -73,13 +121,14 @@ def main(quick: bool = False) -> None:
     # comes from the full `python -m benchmarks.batching_capacity` run.
     # the rag_doc_qa scoring window needs sim_time > warmup + 2*b_total (9 s),
     # so the quick trim floors at 12 s rather than the global `sim_time`
+    bat_kw = dict(QUICK_BATCHING_KW) if quick else dict(QUICK_BATCHING_KW, sim_time=15.0)
+    t0 = time.perf_counter()
     rb = batching_capacity.run(
-        gpus=("a100", "l4"), batches=(1, 8),
-        rate_grids={"l4": (0.25, 1.0, 3.0), "a100": (1.0, 3.0, 6.0, 10.0)},
-        sim_time=12.0 if quick else 15.0, warmup=1.0, n_seeds=1,
         results_name="batching_capacity_quick.json",
         bench_path="benchmarks/results/BENCH_batching_quick.json",
+        workers=workers, **bat_kw,
     )
+    timings["batching_quick_s"] = round(time.perf_counter() - t0, 2)
     for gpu, d in sorted(rb["gpus"].items()):
         for mb, res in sorted(d["per_batch"].items()):
             note = f"rag_doc_qa jobs/s @ 95%, cache holds {d['cache_job_cap']}"
@@ -93,7 +142,7 @@ def main(quick: bool = False) -> None:
                      f"continuous batching, best mb={d['best_mb']}"))
 
     r7 = fig7_gpu_scaling.run(gpu_counts=range(4, 15, 2), sim_time=sim_time,
-                              n_seeds=2)
+                              n_seeds=2, workers=workers)
     rows.append(("fig7.min_gpus_icc", r7["min_gpus"].get("icc"), "paper: 8"))
     rows.append(("fig7.min_gpus_disjoint_ran", r7["min_gpus"].get("disjoint_ran"),
                  "paper: 11"))
@@ -122,9 +171,16 @@ def main(quick: bool = False) -> None:
     for name, value, derived in rows:
         print(f"{name},{value},{derived}")
 
+    if quick:
+        return _check_perf_quick(timings)
+    return 0
+
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true",
                     help="CI mode: shortest sims, results in *_quick.json")
-    main(quick=ap.parse_args().quick)
+    ap.add_argument("--workers", type=int, default=-1,
+                    help="sweep processes (-1 = one per CPU, 1 = serial)")
+    args = ap.parse_args()
+    sys.exit(main(quick=args.quick, workers=args.workers))

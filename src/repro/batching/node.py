@@ -146,6 +146,27 @@ class BatchedComputeNode:
             return 0
         return math.ceil(rem / self.prefill_chunk) if self.chunked_prefill else 1
 
+    def predicted_service(self, job: Job) -> float:
+        """Predicted wall-clock from generation start to last token if
+        `job` joined the batch in its current composition.
+
+        Routing uses this instead of the solo whole-job latency: a batched
+        node serves the job in ``prefill_chunks + n_output`` iterations
+        whose cost is shared across the batch, so quoting
+        ``LatencyModel.job_latency`` (one sequence, whole pass) would make
+        `slack_aware` systematically over-estimate batched fleets and
+        misroute (ROADMAP item)."""
+        batch = min(len(self._running) + 1, self.max_batch)
+        if batch <= 1:
+            return self._svc_solo(job)
+        context = sum(r.context for r in self._running) + job.n_input
+        iters = job.n_output
+        if self.chunked_prefill:
+            iters += math.ceil(job.n_input / self.prefill_chunk)
+        else:
+            iters += 1
+        return iters * self.lm.iteration_latency(0, batch, context)
+
     # ------------------------------------------------------------ internals
     def _svc_solo(self, job: Job) -> float:
         return self.lm.job_latency(job.n_input, job.n_output)

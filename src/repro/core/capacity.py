@@ -4,19 +4,99 @@ The paper's Fig. 6 sweeps the aggregate prompt arrival rate by scaling the
 number of UEs (1 prompt/s/UE, Table I) and reads off the largest rate where
 the job-satisfaction curve stays above alpha = 95 %. We do the same:
 `sweep()` produces the curve, `capacity_from_sweep()` interpolates lambda*.
+
+All sweeps share one (rate x seed) grid runner, `run_grid`, which can fan
+the points out over a process pool (`workers=`, opt-in): every point is an
+independent simulation with its own derived seed, so parallel and serial
+runs aggregate the exact same numbers in the exact same order.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Sequence
+import functools
+from typing import Callable, List, Optional, Sequence, Union
 
 import numpy as np
 
+from .parallel import parallel_map
 from .scheduler import Job
 from .simulator import SchemeConfig, SimConfig, SimResult, simulate
 
-__all__ = ["sweep", "sweep_generic", "network_sweep", "capacity_from_sweep"]
+__all__ = [
+    "mean_over_seeds",
+    "run_grid",
+    "sweep",
+    "sweep_generic",
+    "network_sweep",
+    "capacity_from_sweep",
+]
+
+# optional SimResult fields: None when no job in the scoring window produced
+# them (TTFT/TBT need token-granular nodes; tails need >= 1 completion)
+_OPTIONAL_FIELDS = (
+    "p95_e2e", "p99_e2e", "avg_ttft", "p95_ttft",
+    "p99_ttft", "avg_tbt", "p95_tbt", "p99_tbt",
+)
+
+
+def mean_over_seeds(results: Sequence[SimResult], name: Optional[str] = None) -> SimResult:
+    """Seed-average a group of `SimResult`s into one row.
+
+    The single shared aggregator for every sweep: plain fields are
+    nan-averaged (a seed with no completions contributes NaN, not a crash),
+    Optional fields (tails, TTFT/TBT) average over the seeds that produced
+    them and stay None when none did.
+    """
+    def opt_mean(field: str):
+        vals = [v for r in results if (v := getattr(r, field)) is not None]
+        return float(np.mean(vals)) if vals else None
+
+    return SimResult(
+        scheme=name if name is not None else results[0].scheme,
+        n_jobs=sum(r.n_jobs for r in results),
+        satisfaction=float(np.mean([r.satisfaction for r in results])),
+        drop_rate=float(np.mean([r.drop_rate for r in results])),
+        avg_comm=float(np.nanmean([r.avg_comm for r in results])),
+        avg_comp=float(np.nanmean([r.avg_comp for r in results])),
+        avg_e2e=float(np.nanmean([r.avg_e2e for r in results])),
+        avg_tokens_per_s=float(
+            np.nanmean([r.avg_tokens_per_s for r in results])
+        ),
+        **{f: opt_mean(f) for f in _OPTIONAL_FIELDS},
+    )
+
+
+def run_grid(
+    arrival_rates: Sequence[float],
+    run_one: Callable[[float, int], object],
+    n_seeds: int = 3,
+    workers: Union[int, str, None] = 0,
+) -> List[list]:
+    """Run `run_one(rate, seed_index)` over the full rate x seed grid.
+
+    Returns one list of per-seed results per rate (in rate order). With
+    `workers` > 1 the points run in a process pool — `run_one` must then be
+    picklable (module-level function / functools.partial / callable class).
+    """
+    tasks = [(lam, s) for lam in arrival_rates for s in range(n_seeds)]
+    flat = parallel_map(run_one, tasks, workers=workers)
+    return [
+        flat[i * n_seeds:(i + 1) * n_seeds] for i in range(len(arrival_rates))
+    ]
+
+
+def _sim_point(
+    scheme: SchemeConfig,
+    base: SimConfig,
+    service_time: Callable[[Job], float],
+    lam: float,
+    seed_idx: int,
+) -> SimResult:
+    """One (rate, seed) grid point of `sweep` (module-level: picklable)."""
+    n_ues = max(1, int(round(lam / base.lam_per_ue)))
+    cfg = dataclasses.replace(base, n_ues=n_ues, seed=base.seed + 1000 * seed_idx)
+    return simulate(scheme, cfg, service_time)
 
 
 def sweep(
@@ -25,52 +105,24 @@ def sweep(
     arrival_rates: Sequence[float],
     service_time: Callable[[Job], float],
     n_seeds: int = 3,
+    workers: Union[int, str, None] = 0,
 ) -> List[SimResult]:
     """Run the simulator across aggregate arrival rates (jobs/s).
 
     The number of UEs is scaled (paper: each UE emits 1 prompt/s), averaging
-    satisfaction across seeds.
+    satisfaction across seeds. `workers` > 1 requires a picklable
+    `service_time` (e.g. `repro.core.latency_model.ModelService`).
     """
-    out: List[SimResult] = []
-    for lam in arrival_rates:
-        n_ues = max(1, int(round(lam / base.lam_per_ue)))
-        results = []
-        for seed in range(n_seeds):
-            cfg = dataclasses.replace(base, n_ues=n_ues, seed=base.seed + 1000 * seed)
-            results.append(simulate(scheme, cfg, service_time))
-
-        def opt_mean(field: str):
-            vals = [v for r in results if (v := getattr(r, field)) is not None]
-            return float(np.mean(vals)) if vals else None
-
-        out.append(
-            SimResult(
-                scheme=scheme.name,
-                n_jobs=sum(r.n_jobs for r in results),
-                satisfaction=float(np.mean([r.satisfaction for r in results])),
-                drop_rate=float(np.mean([r.drop_rate for r in results])),
-                avg_comm=float(np.nanmean([r.avg_comm for r in results])),
-                avg_comp=float(np.nanmean([r.avg_comp for r in results])),
-                avg_e2e=float(np.nanmean([r.avg_e2e for r in results])),
-                avg_tokens_per_s=float(
-                    np.nanmean([r.avg_tokens_per_s for r in results])
-                ),
-                **{
-                    f: opt_mean(f)
-                    for f in (
-                        "p95_e2e", "p99_e2e", "avg_ttft", "p95_ttft",
-                        "p99_ttft", "avg_tbt", "p95_tbt", "p99_tbt",
-                    )
-                },
-            )
-        )
-    return out
+    run_one = functools.partial(_sim_point, scheme, base, service_time)
+    groups = run_grid(arrival_rates, run_one, n_seeds=n_seeds, workers=workers)
+    return [mean_over_seeds(g, scheme.name) for g in groups]
 
 
 def sweep_generic(
     arrival_rates: Sequence[float],
     run_one: Callable[[float, int], object],
     n_seeds: int = 3,
+    workers: Union[int, str, None] = 0,
 ) -> List[float]:
     """Seed-averaged satisfaction curve for any simulator.
 
@@ -78,11 +130,29 @@ def sweep_generic(
     attribute (SimResult, NetResult, ...). This is the load-sweep skeleton
     shared by the single-cell and network simulators.
     """
-    curve = []
-    for lam in arrival_rates:
-        sats = [run_one(lam, s).satisfaction for s in range(n_seeds)]
-        curve.append(float(np.mean(sats)))
-    return curve
+    groups = run_grid(arrival_rates, run_one, n_seeds=n_seeds, workers=workers)
+    return [float(np.mean([r.satisfaction for r in g])) for g in groups]
+
+
+def network_point(
+    topology,
+    scenario,
+    policy,
+    sim_time: float,
+    warmup: float,
+    base_seed: int,
+    fast: bool,
+    lam: float,
+    seed_idx: int,
+):
+    """One (rate, seed) point of a network sweep (module-level: picklable)."""
+    from ..network.simulator import config_for_load, simulate_network
+
+    cfg = config_for_load(
+        topology, scenario, lam, sim_time=sim_time, warmup=warmup,
+        seed=base_seed + 1000 * seed_idx,
+    )
+    return simulate_network(cfg, policy, fast=fast)
 
 
 def network_sweep(
@@ -94,6 +164,8 @@ def network_sweep(
     warmup: float = 2.0,
     n_seeds: int = 2,
     base_seed: int = 0,
+    workers: Union[int, str, None] = 0,
+    fast: bool = True,
 ) -> List[float]:
     """Network-level satisfaction curve for one routing policy.
 
@@ -103,18 +175,14 @@ def network_sweep(
     seed-averaged satisfaction per rate (feed to `capacity_from_sweep`).
     """
     from ..network.scenarios import SCENARIOS
-    from ..network.simulator import config_for_load, simulate_network
 
-    scenario = scenario or SCENARIOS["ar_translation"]
-
-    def run_one(lam: float, seed_idx: int):
-        cfg = config_for_load(
-            topology, scenario, lam, sim_time=sim_time, warmup=warmup,
-            seed=base_seed + 1000 * seed_idx,
-        )
-        return simulate_network(cfg, policy)
-
-    return sweep_generic(arrival_rates, run_one, n_seeds=n_seeds)
+    run_one = functools.partial(
+        network_point, topology, scenario or SCENARIOS["ar_translation"],
+        policy, sim_time, warmup, base_seed, fast,
+    )
+    return sweep_generic(
+        arrival_rates, run_one, n_seeds=n_seeds, workers=workers
+    )
 
 
 def capacity_from_sweep(

@@ -33,6 +33,7 @@ __all__ = [
     "HardwareSpec",
     "ModelProfile",
     "LatencyModel",
+    "ModelService",
     "TPU_V5E",
     "A100",
     "H100",
@@ -234,3 +235,22 @@ class LatencyModel:
     def service_rate(self, n_input: int, n_output: int) -> float:
         """Jobs/second the node can sustain (mu2 in the queueing model)."""
         return 1.0 / self.job_latency(n_input, n_output)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelService:
+    """Picklable job-level service-time callable.
+
+    Equivalent to ``lambda job: LatencyModel(hw, model).job_latency(...)``
+    but usable from `ProcessPoolExecutor`-backed sweeps (`workers=`), where
+    lambdas cannot cross the process boundary.
+    """
+
+    hw: HardwareSpec
+    model: ModelProfile
+    fidelity: str = "paper"
+
+    def __call__(self, job) -> float:
+        return LatencyModel(self.hw, self.model, fidelity=self.fidelity).job_latency(
+            job.n_input, job.n_output
+        )

@@ -1,0 +1,65 @@
+"""Process-pool plumbing for capacity sweeps.
+
+Sweep grids (rate x seed x policy) are embarrassingly parallel: every point
+is an independent simulation with its own derived seed, so running them in a
+`ProcessPoolExecutor` changes nothing but wall-clock — results are collected
+back in submission order and each point's RNG stream is untouched
+(equivalence-tested in tests/test_fast_sim.py).
+
+Parallelism is opt-in (`workers=0` keeps the historical serial path). The
+callable and every argument must be picklable — module-level functions,
+`functools.partial` over dataclasses, or callable class instances; closures
+over local state only work serially. On platforms where worker processes
+cannot be spawned (sandboxes), `parallel_map` degrades to the serial path
+with a warning rather than failing the sweep.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+from concurrent.futures import ProcessPoolExecutor
+from concurrent.futures.process import BrokenProcessPool
+from typing import Callable, List, Optional, Sequence, Tuple, Union
+
+__all__ = ["resolve_workers", "parallel_map"]
+
+
+def resolve_workers(workers: Union[int, str, None]) -> int:
+    """Normalize a `workers=` argument to a concrete process count.
+
+    0/1/None -> serial; "auto" or any negative int -> one per CPU.
+    """
+    if workers is None:
+        return 0
+    if workers == "auto":
+        return os.cpu_count() or 1
+    workers = int(workers)
+    if workers < 0:
+        return os.cpu_count() or 1
+    return workers
+
+
+def parallel_map(
+    fn: Callable,
+    tasks: Sequence[Tuple],
+    workers: Union[int, str, None] = 0,
+) -> List:
+    """``[fn(*t) for t in tasks]`` across `workers` processes, order kept.
+
+    Serial when `workers` resolves to <= 1 (bit-identical aggregation order
+    either way: results always come back in task order).
+    """
+    n = resolve_workers(workers)
+    if n <= 1 or len(tasks) <= 1:
+        return [fn(*t) for t in tasks]
+    try:
+        with ProcessPoolExecutor(max_workers=min(n, len(tasks))) as pool:
+            futures = [pool.submit(fn, *t) for t in tasks]
+            return [f.result() for f in futures]
+    except (OSError, PermissionError, BrokenProcessPool) as exc:
+        # no subprocess support here (sandbox), or the workers were killed
+        # (seccomp/cgroup/OOM): tasks are pure simulations, rerun serially
+        print(f"[parallel] process pool unavailable ({exc}); running serially",
+              file=sys.stderr)
+        return [fn(*t) for t in tasks]

@@ -28,6 +28,7 @@ Satisfaction (Def. 1): joint   -> T_E2E <= b_total;
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import itertools
 import math
@@ -126,6 +127,13 @@ class SimResult:
         return s
 
 
+class _ArrivalChunk:
+    """Pre-drawn arrival counts for a span of slots, consumed by cursor."""
+
+    __slots__ = ("start", "end", "jrows", "jues", "jcnts", "jptr",
+                 "brows", "bues", "bcnts", "bptr", "any_arrival")
+
+
 class SlotEngine:
     """One cell's slot-stepped pipeline: UE arrivals -> uplink -> wireline.
 
@@ -145,6 +153,18 @@ class SlotEngine:
     slot-end timestamp, after which the caller runs its compute node(s) up
     to that time. This keeps compute ordering identical whether one engine
     feeds one node (single cell) or many engines share a fleet.
+
+    Fast path (``fast=True``, the default): arrival counts for job bursts
+    and background packets are pre-drawn in chunked ``(slots, 2, n_ues)``
+    Poisson calls — NumPy's `Generator` fills C-order, so the bit stream
+    consumed is identical to the original per-slot draws — and the slot body
+    short-circuits the uplink step whenever the channel is idle. When the
+    whole engine is idle (``is_idle``), the driver may skip straight to the
+    next pre-drawn arrival with ``next_arrival_at_or_after`` +
+    ``skip_slots`` (a pure fast-forward: compute nodes advance by
+    `run_until`, so nothing else ticks per slot). ``fast=False`` keeps the
+    original draw-per-slot reference path for equivalence testing; both
+    produce bit-identical job timelines (tests/test_fast_sim.py).
     """
 
     def __init__(
@@ -156,6 +176,9 @@ class SlotEngine:
         deliver: Callable[[Job], None],
         cell: int = 0,
         uid_iter: Optional[Iterator[int]] = None,
+        fast: bool = True,
+        fast_forward: bool = True,
+        chunk_slots: int = 4096,
     ):
         self.sim = sim
         self.rng = rng
@@ -170,55 +193,203 @@ class SlotEngine:
         self.bits_per_job = sim.n_input * sim.channel.bytes_per_token * 8.0
         self._lam_slot = sim.lam_per_ue * self.slot
         # per-UE FIFO of (job, remaining_bits) bursts awaiting uplink
-        self._in_flight: Dict[int, List[List]] = {u: [] for u in range(sim.n_ues)}
+        self._in_flight: Dict[int, collections.deque] = {
+            u: collections.deque() for u in range(sim.n_ues)
+        }
+        self._n_in_flight = 0
         self.jobs: List[Job] = []
         self._wire_queue: List[Job] = []  # jobs in the wireline pipe
+        self._wire_next = math.inf  # earliest t_compute_arrival in the pipe
+        self.fast = fast
+        self.fast_forward = fast and fast_forward
+        self.slots_skipped = 0
+        # chunked pre-draw state (fast path)
+        self._chunk_slots = max(1, chunk_slots)
+        self._chunks: collections.deque = collections.deque()
+        self._drawn = 0  # slots of arrivals drawn so far
+        self._lam_buf: Optional[np.ndarray] = None
 
+    # ------------------------------------------------- pre-drawn arrivals
+    def _draw_chunk(self) -> None:
+        """Draw the next chunk of (job, background) arrival counts.
+
+        One Poisson call over a ``(L, 2, n_ues)`` rate array consumes the
+        generator exactly like L consecutive slots of the legacy
+        ``poisson(lam_job, n_ues)`` + ``poisson(lam_bg, n_ues)`` pair.
+        """
+        start = self._drawn
+        length = min(self._chunk_slots, self.n_slots - start)
+        if length <= 0:
+            raise RuntimeError("arrival stream exhausted")
+        if self._lam_buf is None:
+            self._lam_buf = np.empty((self._chunk_slots, 2, self.sim.n_ues))
+            self._lam_buf[:, 0, :] = self._lam_slot
+            self._lam_buf[:, 1, :] = self.channel._bg_pkt_per_slot
+        counts = self.rng.poisson(self._lam_buf[:length])
+        # nonzero entries as flat row/ue/count lists consumed by a cursor:
+        # rows come out of np.nonzero sorted, and the slot loop visits them
+        # monotonically, so no per-slot lookup structure is needed
+        ck = _ArrivalChunk()
+        ck.start, ck.end = start, start + length
+        rows, ues = np.nonzero(counts[:, 0, :])
+        ck.jrows = rows.tolist()
+        ck.jues = ues.tolist()
+        ck.jcnts = counts[rows, 0, ues].tolist()
+        ck.jptr = 0
+        rows, ues = np.nonzero(counts[:, 1, :])
+        ck.brows = rows.tolist()
+        ck.bues = ues.tolist()
+        ck.bcnts = counts[rows, 1, ues].tolist()
+        ck.bptr = 0
+        ck.any_arrival = counts.any(axis=(1, 2))
+        self._chunks.append(ck)
+        self._drawn = ck.end
+
+    def _chunk_for(self, s: int) -> "_ArrivalChunk":
+        """The chunk containing slot `s` (slots are consumed monotonically)."""
+        while self._drawn <= s:
+            self._draw_chunk()
+        chunks = self._chunks
+        while chunks[0].end <= s:
+            chunks.popleft()
+        return chunks[0]
+
+    # --------------------------------------------------- fast-forward API
+    def is_idle(self) -> bool:
+        """Nothing in the air, the grant queues, or the wireline pipe."""
+        return (
+            self._n_in_flight == 0
+            and not self._wire_queue
+            and not self.channel.needs_step
+        )
+
+    def can_skip(self) -> bool:
+        return self.fast_forward and self.is_idle()
+
+    def next_arrival_at_or_after(self, s: int) -> int:
+        """Smallest slot >= `s` with any pre-drawn arrival (or `n_slots`)."""
+        while s < self.n_slots:
+            ck = self._chunk_for(s)
+            hits = np.flatnonzero(ck.any_arrival[s - ck.start:])
+            if hits.size:
+                return s + int(hits[0])
+            s = ck.end
+        return self.n_slots
+
+    def skip_slots(self, s_from: int, s_to: int) -> None:
+        """Fast-forward an idle engine across ``[s_from, s_to)``.
+
+        The only per-slot state change on an idle engine is PDCCH credit
+        accrual; replayed as repeated additions so the float trajectory
+        matches the stepped engine exactly.
+        """
+        ch = self.channel
+        for _ in range(s_to - s_from):
+            ch.skip_slot()
+        self.slots_skipped += s_to - s_from
+
+    # -------------------------------------------------------------- step
     def step(self, s: int) -> float:
         """Advance one slot (index `s`); returns the slot-end time."""
+        if not self.fast:
+            return self._step_legacy(s)
         sim, ch = self.sim, self.channel
         now = s * self.slot
-        # 1. arrivals at UEs
+        ck = self._chunk_for(s)
+        rel = s - ck.start
+        # 1. arrivals at UEs (cursor over the chunk's nonzero entries)
+        jrows = ck.jrows
+        p = ck.jptr
+        if p < len(jrows) and jrows[p] == rel:
+            while p < len(jrows) and jrows[p] == rel:
+                for _ in range(ck.jcnts[p]):
+                    self._new_job(ck.jues[p], now)
+                p += 1
+            ck.jptr = p
+        brows = ck.brows
+        q = ck.bptr
+        if q < len(brows) and brows[q] == rel:
+            end = q + 1
+            while end < len(brows) and brows[end] == rel:
+                end += 1
+            ck.bptr = end
+            ch.apply_background_range(ck.bues, ck.bcnts, q, end, now)
+
+        # 2. one slot of uplink (step_drain short-circuits an idle channel
+        # to credit accrual on its own)
+        t_slot_end = now + self.slot
+        drained = ch.step_drain(now, self.packet_priority)
+        if drained:
+            for ue, bits in drained:
+                self._complete_bursts(ue, bits, t_slot_end)
+
+        # 3. hand over due wireline deliveries
+        if self._wire_next <= t_slot_end:
+            self._deliver_due(t_slot_end)
+        return t_slot_end
+
+    def _step_legacy(self, s: int) -> float:
+        """Reference slot body: per-slot draws + whole-array channel step."""
+        sim, ch = self.sim, self.channel
+        now = s * self.slot
         counts = self.rng.poisson(self._lam_slot, sim.n_ues)
         for ue in np.nonzero(counts)[0]:
             for _ in range(int(counts[ue])):
-                j = Job(next(self.uid_iter), int(ue), now, sim.n_input,
-                        sim.n_output, sim.b_total, bits=self.bits_per_job,
-                        cell=self.cell)
-                self.jobs.append(j)
-                self._in_flight[int(ue)].append([j, j.bits])
-                ch.add_job_bits(int(ue), j.bits, now)
+                self._new_job(int(ue), now)
         ch.add_background(now)
 
-        # 2. one slot of uplink
         drained = ch.step(now, prioritize_jobs=self.packet_priority)
         t_slot_end = now + self.slot
         for ue in np.nonzero(drained > 0)[0]:
-            ue = int(ue)
-            bits = float(drained[ue])
-            # complete jobs FIFO within the UE's burst queue
-            while bits > 1e-9 and self._in_flight[ue]:
-                entry = self._in_flight[ue][0]
-                use = min(bits, entry[1])
-                entry[1] -= use
-                bits -= use
-                if entry[1] <= 1e-9:
-                    self._in_flight[ue].pop(0)
-                    j = entry[0]
-                    j.t_compute_arrival = t_slot_end + self.wireline(j, t_slot_end)
-                    self._wire_queue.append(j)
-                else:
-                    break
+            self._complete_bursts(int(ue), float(drained[ue]), t_slot_end)
 
-        # 3. hand over due wireline deliveries
+        self._deliver_due(t_slot_end)
+        return t_slot_end
+
+    # ----------------------------------------------------------- helpers
+    def _new_job(self, ue: int, now: float) -> None:
+        sim = self.sim
+        j = Job(next(self.uid_iter), ue, now, sim.n_input,
+                sim.n_output, sim.b_total, bits=self.bits_per_job,
+                cell=self.cell)
+        self.jobs.append(j)
+        self._in_flight[ue].append([j, j.bits])
+        self._n_in_flight += 1
+        self.channel.add_job_bits(ue, j.bits, now)
+
+    def _complete_bursts(self, ue: int, bits: float, t_slot_end: float) -> None:
+        # complete jobs FIFO within the UE's burst queue
+        queue = self._in_flight[ue]
+        while bits > 1e-9 and queue:
+            entry = queue[0]
+            use = min(bits, entry[1])
+            entry[1] -= use
+            bits -= use
+            if entry[1] <= 1e-9:
+                queue.popleft()
+                self._n_in_flight -= 1
+                j = entry[0]
+                j.t_compute_arrival = t_slot_end + self.wireline(j, t_slot_end)
+                self._wire_queue.append(j)
+                if j.t_compute_arrival < self._wire_next:
+                    self._wire_next = j.t_compute_arrival
+            else:
+                break
+
+    def _deliver_due(self, t_slot_end: float) -> None:
+        if not self._wire_queue:
+            return
         still = []
+        nxt = math.inf
         for j in self._wire_queue:
             if j.t_compute_arrival <= t_slot_end:
                 self.deliver(j)
             else:
                 still.append(j)
+                if j.t_compute_arrival < nxt:
+                    nxt = j.t_compute_arrival
         self._wire_queue = still
-        return t_slot_end
+        self._wire_next = nxt
 
 
 def score_jobs(
@@ -302,6 +473,7 @@ def simulate(
     sim: SimConfig,
     service_time: Optional[Callable[[Job], float]] = None,
     node_factory: Optional[Callable[[], "ComputeNodeProtocol"]] = None,
+    fast: bool = True,
 ) -> SimResult:
     """Run one slot-stepped simulation and score Def.-1 satisfaction.
 
@@ -311,6 +483,9 @@ def simulate(
     `ComputeNode` configured by `scheme`. Alternatively `node_factory`
     supplies any `ComputeNodeProtocol` implementation (e.g. a configured
     `repro.batching.BatchedComputeNode`); exactly one must be given.
+
+    ``fast=False`` selects the reference draw-per-slot engine (identical
+    fixed-seed results, ~4x slower; kept for equivalence testing).
     """
     if (service_time is None) == (node_factory is None):
         raise ValueError("pass exactly one of service_time / node_factory")
@@ -330,10 +505,20 @@ def simulate(
         packet_priority=scheme.packet_priority,
         wireline=lambda job, t: scheme.t_wireline,
         deliver=node.submit,
+        fast=fast,
     )
-    for s in range(engine.n_slots):
+    s, n_slots = 0, engine.n_slots
+    while s < n_slots:
+        if engine.can_skip():
+            # idle-slot fast-forward: jump to the next pre-drawn arrival
+            nxt = engine.next_arrival_at_or_after(s)
+            if nxt > s:
+                engine.skip_slots(s, min(nxt, n_slots))
+                s = nxt
+                continue
         t_slot_end = engine.step(s)
         node.run_until(t_slot_end)
+        s += 1
     node.run_until(float("inf"))
     return score_jobs(
         engine.jobs,

@@ -65,10 +65,23 @@ class FleetNode:
 
     def predict_finish(self, job: Job, t_arrival: float, now: float) -> float:
         """Predicted completion if `job` were routed here, arriving at
-        `t_arrival`: queue drain + in-transit commitments + its own service."""
-        start = max(self.node.estimated_free_at(now) + self.in_transit_s,
-                    t_arrival)
-        return start + self.service_time(job)
+        `t_arrival`: queue drain + in-transit commitments + its own service.
+
+        Batched nodes (`repro.batching.BatchedComputeNode`) expose
+        `predicted_service` and serve up to `max_batch` sequences per
+        iteration, so both the job's own service and the in-transit backlog
+        amortize across the batch width; classic whole-job nodes keep the
+        single-server estimate."""
+        node = self.node
+        predicted = getattr(node, "predicted_service", None)
+        if predicted is not None:
+            svc = predicted(job)
+            transit = self.in_transit_s / getattr(node, "max_batch", 1)
+        else:
+            svc = self.service_time(job)
+            transit = self.in_transit_s
+        start = max(node.estimated_free_at(now) + transit, t_arrival)
+        return start + svc
 
 
 def build_fleet_node(
