@@ -64,7 +64,9 @@ def run(
     scenario_loads = SCENARIO_LOADS if scenario_loads is None else scenario_loads
     topo = three_cell_hetero()
     scenario = SCENARIOS["ar_translation"]
-    policies = sorted(POLICIES)
+    # "controlled" without a bound controller decides exactly like
+    # slack_aware — it is benchmarked in control_capacity, not here
+    policies = sorted(p for p in POLICIES if p != "controlled")
     out = {
         "rates": rates,
         "alpha": alpha,

@@ -141,6 +141,27 @@ def main(quick: bool = False, workers: int = -1) -> int:
                      round(d["gain_best_vs_mb1"], 3),
                      f"continuous batching, best mb={d['best_mb']}"))
 
+    from . import control_capacity
+
+    # reduced flash-crowd control pass; the tracked BENCH_control.json
+    # baseline comes from the full `python -m benchmarks.control_capacity`
+    t0 = time.perf_counter()
+    rc = control_capacity.run(
+        results_name="control_capacity_quick.json",
+        bench_path="benchmarks/results/BENCH_control_quick.json",
+        sim_time=8.0, n_seeds=1 if quick else 2, workers=workers,
+    )
+    timings["control_quick_s"] = round(time.perf_counter() - t0, 2)
+    for arm in ("slack_aware", "reactive", "slack_aware_joint"):
+        a = rc["arms"][arm]
+        rows.append((f"control.spike_sat_{arm}", a["spike_sat"],
+                     "flash_crowd windowed Def-1 sat during the spike"))
+        rows.append((f"control.recovery_sat_{arm}", a["recovery_sat"],
+                     "post-spike windows"))
+    rows.append(("control.joint_vs_best_static_spike",
+                 rc["headline"]["joint_vs_best_static_spike"],
+                 f"joint controller vs {rc['best_static']}"))
+
     r7 = fig7_gpu_scaling.run(gpu_counts=range(4, 15, 2), sim_time=sim_time,
                               n_seeds=2, workers=workers)
     rows.append(("fig7.min_gpus_icc", r7["min_gpus"].get("icc"), "paper: 8"))

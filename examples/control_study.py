@@ -1,0 +1,83 @@
+"""Control study: surviving a flash crowd with joint bandwidth-compute
+control.
+
+The paper's ICC stance is that one operator manages RAN bandwidth and
+compute *jointly*. This study shows what that buys once traffic stops
+being stationary:
+
+  1. a flash crowd (12x arrival spike, heavy vision prompts) collapses
+     every static routing policy — equal-share uplink makes everyone
+     finish late and the backlog outlives the spike;
+  2. the `slack_aware_joint` controller (repro.control) meters admission
+     to what the carrier and fleet can clear, boosts near-deadline UEs'
+     PRB share, and re-targets routing by queue pressure — the transient
+     satisfaction window-by-window tells the story;
+  3. mobile UEs roam between cells mid-run, with in-flight uplink bursts
+     re-homed over Xn at each handover.
+
+Run:  PYTHONPATH=src python examples/control_study.py
+"""
+
+from repro.control import MobilityConfig
+from repro.network import SCENARIOS, config_for_load, simulate_network, three_cell_hetero
+
+TOPO = three_cell_hetero()
+SC = SCENARIOS["flash_crowd"]
+LOAD = 40.0  # base-rate jobs/s the deployment is sized for (the spike
+             # takes the offered load to ~480)
+SPIKE = (SC.arrival.t_start, SC.arrival.t_end)
+
+
+def run(policy, controller=None, mobility=None):
+    cfg = config_for_load(
+        TOPO, SC, LOAD, sim_time=10.0, warmup=1.0, window_s=0.5,
+        controller=controller, mobility=mobility,
+    )
+    return simulate_network(cfg, policy)
+
+
+print("=== 1. Flash crowd vs static policies ===")
+print(f"{SC.description}\n")
+static = {p: run(p) for p in ("local_only", "mec_only", "slack_aware")}
+joint = run("controlled", controller="slack_aware_joint")
+for name, r in {**static, "slack_aware_joint": joint}.items():
+    print(f"  {name:18s} overall sat={r.satisfaction:.3f} "
+          f"drop={r.total.drop_rate:.3f} rejected={r.n_rejected}")
+
+print("\n=== 2. The transient, window by window ===")
+print("      window    offered  slack_aware  joint   (spike: "
+      f"[{SPIKE[0]:.0f}, {SPIKE[1]:.0f}) s)")
+def _fmt(sat):
+    return "   --" if sat is None else f"{sat:5.2f}"
+
+for ws, wj in zip(static["slack_aware"].total.windows, joint.total.windows):
+    tag = " <== spike" if SPIKE[0] <= ws["t0"] < SPIKE[1] else ""
+    bar = "#" * int((wj["satisfaction"] or 0.0) * 20)
+    print(f"  [{ws['t0']:4.1f},{ws['t1']:4.1f})  n={ws['n']:4d}   "
+          f"{_fmt(ws['satisfaction'])}      {_fmt(wj['satisfaction'])}  "
+          f"{bar}{tag}")
+
+def _sats(res, lo, hi):
+    return [w["satisfaction"] for w in res.total.windows
+            if lo <= w["t0"] < hi and w["satisfaction"] is not None]
+
+spike_s = _sats(static["slack_aware"], *SPIKE)
+spike_j = _sats(joint, *SPIKE)
+post_s = _sats(static["slack_aware"], SPIKE[1], float("inf"))
+post_j = _sats(joint, SPIKE[1], float("inf"))
+assert all(j > s for s, j in zip(spike_s, spike_j)), "joint lost a spike window"
+print(f"\nDuring the spike the joint controller serves "
+      f"{sum(spike_j) / max(sum(spike_s), 1e-9):.1f}x the on-time fraction of "
+      f"slack_aware; after it, satisfaction snaps back to "
+      f"{sum(post_j) / len(post_j):.2f} while the uncontrolled network is "
+      f"still digesting backlog at {sum(post_s) / len(post_s):.2f}.")
+
+print("\n=== 3. Mobility: handovers with in-flight re-homing ===")
+mob = MobilityConfig(n_roamers=6, dwell_mean_s=0.5)
+for name, pol, ctl in [("slack_aware", "slack_aware", None),
+                       ("slack_aware_joint", "controlled", "slack_aware_joint")]:
+    r = run(pol, controller=ctl, mobility=mob)
+    print(f"  {name:18s} sat={r.satisfaction:.3f} handovers={r.n_handovers} "
+          f"in-flight bursts re-homed={r.n_rehomed}")
+print("\n(An admission-controlled cell keeps its air interface nearly empty, "
+      "so far fewer in-flight bursts need re-homing at each handover.)")

@@ -1,0 +1,67 @@
+"""repro.control — joint bandwidth-compute control (beyond-paper).
+
+The paper's ICC stance is that one operator owns RAN bandwidth *and*
+compute; PR 1-3 modeled both statically. This package makes the system
+dynamic along three axes:
+
+  arrivals.py     non-stationary arrival processes (piecewise / diurnal /
+                  MMPP / flash crowd) behind an abstraction whose
+                  stationary case stays bit-identical to the PR-3 engine
+  mobility.py     UE roaming between cells with Xn-handover re-homing of
+                  in-flight uplink state
+  controllers.py  the online control loop: epoch observations -> actions
+                  on bandwidth partition, admission, and routing retargets
+  policy.py       controller presets (static / reactive /
+                  slack_aware_joint) + the shared ControlState
+"""
+
+from .arrivals import (
+    MMPP,
+    ArrivalProcess,
+    BoundArrivals,
+    DiurnalRate,
+    FlashCrowd,
+    PiecewiseRate,
+    PoissonProcess,
+    bind_arrivals,
+)
+from .controllers import (
+    Actions,
+    CellObs,
+    Controller,
+    NodeObs,
+    Observation,
+    ReactiveController,
+    SlackAwareJointController,
+    StaticController,
+    control_epoch,
+)
+from .mobility import HandoverEvent, MobilityConfig, MobilityModel
+from .policy import CONTROLLERS, ControlState, get_controller, list_controllers
+
+__all__ = [
+    "MMPP",
+    "ArrivalProcess",
+    "BoundArrivals",
+    "DiurnalRate",
+    "FlashCrowd",
+    "PiecewiseRate",
+    "PoissonProcess",
+    "bind_arrivals",
+    "Actions",
+    "CellObs",
+    "Controller",
+    "NodeObs",
+    "Observation",
+    "ReactiveController",
+    "SlackAwareJointController",
+    "StaticController",
+    "control_epoch",
+    "HandoverEvent",
+    "MobilityConfig",
+    "MobilityModel",
+    "CONTROLLERS",
+    "ControlState",
+    "get_controller",
+    "list_controllers",
+]

@@ -52,6 +52,31 @@ def mean_over_seeds(results: Sequence[SimResult], name: Optional[str] = None) ->
         vals = [v for r in results if (v := getattr(r, field)) is not None]
         return float(np.mean(vals)) if vals else None
 
+    def win_mean():
+        # windowed metrics pool elementwise when every seed produced the
+        # same window grid (same config => same edges); mixed/absent
+        # windows collapse to None rather than a misaligned average.
+        # Pooling weights by job count, so an empty-window seed (None
+        # satisfaction) simply contributes no jobs.
+        wins = [r.windows for r in results]
+        if any(w is None for w in wins) or len({len(w) for w in wins}) != 1:
+            return None
+        out = []
+        for cols in zip(*wins):
+            n = sum(c["n"] for c in cols)
+            def pooled(key):
+                if n == 0:
+                    return None
+                return sum(c[key] * c["n"] for c in cols if c["n"]) / n
+            out.append({
+                "t0": cols[0]["t0"],
+                "t1": cols[0]["t1"],
+                "n": n,
+                "satisfaction": pooled("satisfaction"),
+                "drop_rate": pooled("drop_rate"),
+            })
+        return out
+
     return SimResult(
         scheme=name if name is not None else results[0].scheme,
         n_jobs=sum(r.n_jobs for r in results),
@@ -63,6 +88,7 @@ def mean_over_seeds(results: Sequence[SimResult], name: Optional[str] = None) ->
         avg_tokens_per_s=float(
             np.nanmean([r.avg_tokens_per_s for r in results])
         ),
+        windows=win_mean(),
         **{f: opt_mean(f) for f in _OPTIONAL_FIELDS},
     )
 
@@ -72,15 +98,18 @@ def run_grid(
     run_one: Callable[[float, int], object],
     n_seeds: int = 3,
     workers: Union[int, str, None] = 0,
+    chunk: Union[int, str, None] = None,
 ) -> List[list]:
     """Run `run_one(rate, seed_index)` over the full rate x seed grid.
 
     Returns one list of per-seed results per rate (in rate order). With
     `workers` > 1 the points run in a process pool — `run_one` must then be
     picklable (module-level function / functools.partial / callable class).
+    `chunk` batches points per worker dispatch (default auto-sized);
+    results are identical to serial at any chunking.
     """
     tasks = [(lam, s) for lam in arrival_rates for s in range(n_seeds)]
-    flat = parallel_map(run_one, tasks, workers=workers)
+    flat = parallel_map(run_one, tasks, workers=workers, chunk=chunk)
     return [
         flat[i * n_seeds:(i + 1) * n_seeds] for i in range(len(arrival_rates))
     ]
@@ -106,6 +135,7 @@ def sweep(
     service_time: Callable[[Job], float],
     n_seeds: int = 3,
     workers: Union[int, str, None] = 0,
+    chunk: Union[int, str, None] = None,
 ) -> List[SimResult]:
     """Run the simulator across aggregate arrival rates (jobs/s).
 
@@ -114,7 +144,8 @@ def sweep(
     `service_time` (e.g. `repro.core.latency_model.ModelService`).
     """
     run_one = functools.partial(_sim_point, scheme, base, service_time)
-    groups = run_grid(arrival_rates, run_one, n_seeds=n_seeds, workers=workers)
+    groups = run_grid(arrival_rates, run_one, n_seeds=n_seeds,
+                      workers=workers, chunk=chunk)
     return [mean_over_seeds(g, scheme.name) for g in groups]
 
 
@@ -123,6 +154,7 @@ def sweep_generic(
     run_one: Callable[[float, int], object],
     n_seeds: int = 3,
     workers: Union[int, str, None] = 0,
+    chunk: Union[int, str, None] = None,
 ) -> List[float]:
     """Seed-averaged satisfaction curve for any simulator.
 
@@ -130,7 +162,8 @@ def sweep_generic(
     attribute (SimResult, NetResult, ...). This is the load-sweep skeleton
     shared by the single-cell and network simulators.
     """
-    groups = run_grid(arrival_rates, run_one, n_seeds=n_seeds, workers=workers)
+    groups = run_grid(arrival_rates, run_one, n_seeds=n_seeds,
+                      workers=workers, chunk=chunk)
     return [float(np.mean([r.satisfaction for r in g])) for g in groups]
 
 
@@ -144,13 +177,18 @@ def network_point(
     fast: bool,
     lam: float,
     seed_idx: int,
+    extra: Optional[dict] = None,
 ):
-    """One (rate, seed) point of a network sweep (module-level: picklable)."""
+    """One (rate, seed) point of a network sweep (module-level: picklable).
+
+    `extra` passes additional NetSimConfig fields through `config_for_load`
+    (controller=, mobility=, window_s=, ...) for control-subsystem sweeps.
+    """
     from ..network.simulator import config_for_load, simulate_network
 
     cfg = config_for_load(
         topology, scenario, lam, sim_time=sim_time, warmup=warmup,
-        seed=base_seed + 1000 * seed_idx,
+        seed=base_seed + 1000 * seed_idx, **(extra or {}),
     )
     return simulate_network(cfg, policy, fast=fast)
 
@@ -166,6 +204,8 @@ def network_sweep(
     base_seed: int = 0,
     workers: Union[int, str, None] = 0,
     fast: bool = True,
+    chunk: Union[int, str, None] = None,
+    extra: Optional[dict] = None,
 ) -> List[float]:
     """Network-level satisfaction curve for one routing policy.
 
@@ -173,15 +213,16 @@ def network_sweep(
     UE population is rescaled per rate and redistributed across sites in
     proportion to the topology's configured populations. Returns the
     seed-averaged satisfaction per rate (feed to `capacity_from_sweep`).
+    `extra` forwards NetSimConfig fields (controller=, mobility=, ...).
     """
     from ..network.scenarios import SCENARIOS
 
     run_one = functools.partial(
         network_point, topology, scenario or SCENARIOS["ar_translation"],
-        policy, sim_time, warmup, base_seed, fast,
+        policy, sim_time, warmup, base_seed, fast, extra=extra,
     )
     return sweep_generic(
-        arrival_rates, run_one, n_seeds=n_seeds, workers=workers
+        arrival_rates, run_one, n_seeds=n_seeds, workers=workers, chunk=chunk
     )
 
 

@@ -167,6 +167,9 @@ class UplinkChannel:
         self._scalar_resume = max(1, scalar_cutoff // 2)  # hysteresis
         self._resume_check = 0  # slots until the next switch-down check
         self.array_mode_switches = 0  # diagnostics (tests assert coverage)
+        # controller-set per-UE PRB weights for the prioritized job split
+        # (None = the original equal split, the bit-exact default path)
+        self._job_w: Optional[np.ndarray] = None
 
     # ------------------------------------------------------- mode switching
     def _to_array_mode(self) -> None:
@@ -201,6 +204,42 @@ class UplinkChannel:
         return bool(
             self._ready or self._parked or self._job_reqs or self._bg_reqs
         )
+
+    def set_job_weights(self, weights: Optional[np.ndarray]) -> None:
+        """Set (or clear) per-UE PRB weights for the prioritized job split.
+
+        The joint controller's bandwidth action: transmitting job UEs share
+        the carrier proportionally to their weight instead of equally, so
+        near-deadline jobs can be pushed across the air first. ``None``
+        restores the exact default split. While weights are set the channel
+        runs its single (array-mode) implementation — the scalar replica is
+        only maintained for the unweighted math."""
+        if weights is None:
+            self._job_w = None
+            return
+        w = np.asarray(weights, dtype=float)
+        if w.shape != (self.n,) or np.any(w <= 0.0):
+            raise ValueError("weights must be positive with one entry per UE")
+        self._job_w = w
+        if self._ready is not None:
+            self._to_array_mode()
+
+    def evict_ue(self, ue: int) -> None:
+        """Erase `ue`'s uplink state (mobility handover re-homing): queued
+        bits, grant flags, and pending scheduling requests. The caller
+        re-injects any evicted job bursts at the target cell."""
+        if self._job_reqs:
+            self._job_reqs = deque(r for r in self._job_reqs if r[1] != ue)
+        if self._bg_reqs:
+            self._bg_reqs = deque(r for r in self._bg_reqs if r[1] != ue)
+        self.job_bits[ue] = 0.0
+        self.bg_bits[ue] = 0.0
+        self.bg_ahead_of_job[ue] = 0.0
+        self.job_granted[ue] = False
+        self.bg_granted[ue] = False
+        if self._ready is not None:
+            self._ready.discard(ue)
+            self._parked.discard(ue)
 
     def skip_slot(self) -> None:
         """Accrue one slot of PDCCH grant credit without stepping.
@@ -320,7 +359,7 @@ class UplinkChannel:
         if ready is not None:
             if not ready:
                 return _NO_DRAIN
-            if len(ready) <= self._scalar_cutoff:
+            if self._job_w is None and len(ready) <= self._scalar_cutoff:
                 return self._step_scalar(now, prioritize_jobs)
             self._to_array_mode()
             self._resume_check = 16
@@ -335,7 +374,7 @@ class UplinkChannel:
             n_granted = int(np.count_nonzero(self.job_granted)) + int(
                 np.count_nonzero(self.bg_granted)
             )
-            if n_granted <= self._scalar_resume:
+            if self._job_w is None and n_granted <= self._scalar_resume:
                 self._to_list_mode()
         nz = np.nonzero(drained > 0.0)[0]
         return [(int(u), float(drained[u])) for u in nz]
@@ -360,7 +399,13 @@ class UplinkChannel:
             # ICC: UEs with job traffic split the carrier first.
             n_job = int(np.count_nonzero(job_ready))
             if n_job > 0:
-                cap[job_ready] = self._full_arr[job_ready] / n_job
+                if self._job_w is None:
+                    cap[job_ready] = self._full_arr[job_ready] / n_job
+                else:
+                    # controller bandwidth action: PRB share proportional
+                    # to the per-UE weight (equal weights == 1/n_job)
+                    w = self._job_w[job_ready]
+                    cap[job_ready] = self._full_arr[job_ready] * (w / w.sum())
                 job_tx = np.minimum(self.job_bits, cap)
                 leftover = cap - job_tx
                 bg_tx = np.minimum(self.bg_bits, np.where(bg_ready, leftover, 0.0))

@@ -48,6 +48,9 @@ class Job:
     # whole-job ComputeNode leaves it NaN and score_jobs skips TTFT/TBT)
     t_first_token: float = float("nan")
     dropped: bool = False
+    # False when an admission controller rejected the job at generation
+    # (it never entered the uplink; also marked dropped)
+    admitted: bool = True
 
     @property
     def t_comm(self) -> float:

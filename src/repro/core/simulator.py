@@ -36,6 +36,7 @@ from typing import Callable, Dict, Iterator, List, Literal, Optional
 
 import numpy as np
 
+from ..control.arrivals import ArrivalProcess, BoundArrivals, bind_arrivals
 from .channel import ChannelConfig, UplinkChannel
 from .latency_model import LatencyModel
 from .scheduler import ComputeNode, ComputeNodeProtocol, Job
@@ -88,6 +89,12 @@ class SimConfig:
     warmup: float = 2.0
     seed: int = 0
     channel: ChannelConfig = dataclasses.field(default_factory=ChannelConfig)
+    # arrival-process spec (repro.control.arrivals); None = stationary
+    # Poisson at lam_per_ue, bit-identical to the pre-control engine
+    arrivals: Optional[ArrivalProcess] = None
+    # transient-metric window length: score_jobs additionally reports
+    # per-window satisfaction over the scoring span (None = off)
+    window_s: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -111,6 +118,9 @@ class SimResult:
     avg_tbt: Optional[float] = None  # mean time between output tokens
     p95_tbt: Optional[float] = None
     p99_tbt: Optional[float] = None
+    # transient satisfaction: one dict per scoring window (t0/t1/n/
+    # satisfaction/drop_rate), present only when window_s was requested
+    windows: Optional[List[dict]] = None
 
     def row(self) -> str:
         s = (
@@ -179,6 +189,8 @@ class SlotEngine:
         fast: bool = True,
         fast_forward: bool = True,
         chunk_slots: int = 4096,
+        arrivals: Optional[BoundArrivals] = None,
+        gate: Optional[Callable[[Job, float], bool]] = None,
     ):
         self.sim = sim
         self.rng = rng
@@ -191,7 +203,31 @@ class SlotEngine:
         self.slot = sim.channel.slot_s
         self.n_slots = int(math.ceil(sim.sim_time / self.slot))
         self.bits_per_job = sim.n_input * sim.channel.bytes_per_token * 8.0
-        self._lam_slot = sim.lam_per_ue * self.slot
+        # arrival process: a pre-bound object (multi-cell driver, which
+        # layers mobility presence on top) or the SimConfig's spec
+        self.arrivals = arrivals if arrivals is not None else bind_arrivals(
+            sim.arrivals, n_ues=sim.n_ues, lam_per_ue=sim.lam_per_ue,
+            slot_s=self.slot, n_slots=self.n_slots, seed=sim.seed,
+        )
+        if (self.arrivals.n_ues, self.arrivals.n_slots) != (sim.n_ues, self.n_slots):
+            raise ValueError("bound arrivals do not match the engine geometry")
+        # constant per-slot rate on the stationary path (None otherwise:
+        # the chunk fill / per-slot draws go through self.arrivals)
+        self._lam_slot = (
+            self.arrivals.rate_slot if self.arrivals.stationary else None
+        )
+        # admission gate (controller hook): called per generated job; a
+        # False return drops the job before it enters the uplink
+        self.gate = gate
+        # mean uncontended uplink latency for one job burst (SR maturation
+        # plus solo transmission): the controllers' per-cell comm floor
+        mean_full = float(np.mean(self.channel._full_arr))
+        self._carrier_bps = mean_full / self.slot
+        self.uplink_floor_s = (
+            sim.channel.sr_cycle_s + self.bits_per_job / self._carrier_bps
+        )
+        # jobs/s a clean carrier moves for this cell's job shape
+        self.uplink_rate = self._carrier_bps / self.bits_per_job
         # per-UE FIFO of (job, remaining_bits) bursts awaiting uplink
         self._in_flight: Dict[int, collections.deque] = {
             u: collections.deque() for u in range(sim.n_ues)
@@ -223,8 +259,15 @@ class SlotEngine:
             raise RuntimeError("arrival stream exhausted")
         if self._lam_buf is None:
             self._lam_buf = np.empty((self._chunk_slots, 2, self.sim.n_ues))
-            self._lam_buf[:, 0, :] = self._lam_slot
+            if self.arrivals.stationary:
+                self._lam_buf[:, 0, :] = self._lam_slot
             self._lam_buf[:, 1, :] = self.channel._bg_pkt_per_slot
+        if not self.arrivals.stationary:
+            # non-stationary process: this chunk's per-slot per-UE rates
+            # (stationary keeps the one-time constant fill above, so the
+            # buffer — and therefore the Poisson draw — is bit-identical
+            # to the pre-abstraction engine)
+            self.arrivals.fill(self._lam_buf[:length, 0, :], start)
         counts = self.rng.poisson(self._lam_buf[:length])
         # nonzero entries as flat row/ue/count lists consumed by a cursor:
         # rows come out of np.nonzero sorted, and the slot loop visits them
@@ -275,6 +318,15 @@ class SlotEngine:
                 return s + int(hits[0])
             s = ck.end
         return self.n_slots
+
+    def next_event_at_or_after(self, s: int) -> int:
+        """Smallest slot >= `s` the driver must actually execute: the next
+        pre-drawn arrival *or* the arrival process's next forced wake (a
+        rate-regime edge such as a flash-crowd onset). Drivers skip to this
+        instead of the raw arrival cursor so a non-stationary source's
+        regime changes — and, via the drivers' own clamps, controller
+        epochs and mobility events — can't be fast-forwarded over."""
+        return min(self.next_arrival_at_or_after(s), self.arrivals.next_wake(s))
 
     def skip_slots(self, s_from: int, s_to: int) -> None:
         """Fast-forward an idle engine across ``[s_from, s_to)``.
@@ -332,7 +384,10 @@ class SlotEngine:
         """Reference slot body: per-slot draws + whole-array channel step."""
         sim, ch = self.sim, self.channel
         now = s * self.slot
-        counts = self.rng.poisson(self._lam_slot, sim.n_ues)
+        if self._lam_slot is not None:  # stationary: the original call
+            counts = self.rng.poisson(self._lam_slot, sim.n_ues)
+        else:
+            counts = self.rng.poisson(self.arrivals.rates_at(s))
         for ue in np.nonzero(counts)[0]:
             for _ in range(int(counts[ue])):
                 self._new_job(int(ue), now)
@@ -353,9 +408,62 @@ class SlotEngine:
                 sim.n_output, sim.b_total, bits=self.bits_per_job,
                 cell=self.cell)
         self.jobs.append(j)
+        if self.gate is not None and not self.gate(j, now):
+            # admission control rejected the job at generation: it never
+            # touches the uplink but still counts against satisfaction
+            j.dropped = True
+            j.admitted = False
+            return
         self._in_flight[ue].append([j, j.bits])
         self._n_in_flight += 1
         self.channel.add_job_bits(ue, j.bits, now)
+
+    # ------------------------------------------------- handover / control
+    def evict_ue(self, ue: int) -> List[list]:
+        """Pull `ue`'s in-flight uplink bursts out of this cell (mobility
+        handover): returns ``[[job, remaining_bits], ...]`` for the driver
+        to re-inject at the target cell. Jobs already past the air
+        interface (wireline, compute queue) are untouched."""
+        queue = self._in_flight[ue]
+        bursts = [list(entry) for entry in queue]
+        if bursts:
+            self._n_in_flight -= len(bursts)
+            queue.clear()
+        self.channel.evict_ue(ue)
+        return bursts
+
+    def inject_burst(self, ue: int, job: Job, remaining_bits: float,
+                     now: float) -> None:
+        """Resume an evicted burst on this cell's uplink (the Xn transfer
+        has completed); the job keeps its identity and deadline."""
+        self._in_flight[ue].append([job, remaining_bits])
+        self._n_in_flight += 1
+        self.channel.add_job_bits(ue, remaining_bits, now)
+
+    def urgent_ues(self, now: float, slack_s: float) -> List[int]:
+        """UEs whose head in-flight job is within `slack_s` of its
+        deadline (the controllers' urgent bandwidth class)."""
+        return [
+            ue for ue, q in self._in_flight.items()
+            if q and q[0][0].deadline - now < slack_s
+        ]
+
+    def min_inflight_slack(self, now: float) -> float:
+        """Tightest deadline slack across in-flight bursts (inf if none)."""
+        slack = math.inf
+        for q in self._in_flight.values():
+            for job, _ in q:
+                slack = min(slack, job.deadline - now)
+        return slack
+
+    def uplink_drain_s(self) -> float:
+        """Time the mean carrier would need to drain the queued job bits —
+        the controllers' measure of air-interface congestion."""
+        bits = 0.0
+        for q in self._in_flight.values():
+            for _, rem in q:
+                bits += rem
+        return bits / self._carrier_bps
 
     def _complete_bursts(self, ue: int, bits: float, t_slot_end: float) -> None:
         # complete jobs FIFO within the UE's burst queue
@@ -399,51 +507,85 @@ def score_jobs(
     management: Literal["joint", "disjoint"] = "joint",
     b_comm: Optional[float] = None,
     b_comp: Optional[float] = None,
+    window_s: Optional[float] = None,
 ) -> SimResult:
     """Def.-1 satisfaction scoring over the warmup-trimmed job set.
 
     Disjoint management needs the stage sub-budgets (take them from the
     SchemeConfig — they are not defaulted here to avoid a second copy of
-    the §III-B split); joint management ignores them."""
+    the §III-B split); joint management ignores them.
+
+    `window_s` (or ``sim.window_s``) additionally bins the scoring span
+    into fixed windows by generation time and reports per-window
+    satisfaction/drops — the transient view a flash crowd needs, where the
+    run-level average hides both the collapse and the recovery."""
     if management == "disjoint" and (b_comm is None or b_comp is None):
         raise ValueError("disjoint scoring requires b_comm and b_comp")
-    scored = [
-        j for j in jobs
-        if sim.warmup <= j.t_gen <= sim.sim_time - 2 * sim.b_total
-    ]
+    if window_s is None:
+        window_s = sim.window_s
+    t_lo, t_hi = sim.warmup, sim.sim_time - 2 * sim.b_total
+    scored = [j for j in jobs if t_lo <= j.t_gen <= t_hi]
     n = len(scored)
     if n == 0:
         return SimResult(name, 0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0)
+
+    n_win = (
+        max(1, int(math.ceil((t_hi - t_lo) / window_s)))
+        if window_s and t_hi > t_lo else 0
+    )
+    win_n = [0] * n_win
+    win_sat = [0] * n_win
+    win_drop = [0] * n_win
 
     sat = 0
     comm, comp, e2e, tps = [], [], [], []
     ttft, tbt = [], []
     for j in scored:
-        if j.dropped or math.isnan(j.t_complete):
-            continue
-        t_comm = j.t_comm
-        t_comp = j.t_complete - j.t_compute_arrival
-        comm.append(t_comm)
-        comp.append(t_comp)
-        e2e.append(j.e2e)
-        tps.append((j.n_input + j.n_output) / j.e2e)
-        if not math.isnan(j.t_first_token):
-            # user-perceived TTFT: generation to first output token (the
-            # same clock as e2e, so comm delay counts against it)
-            ttft.append(j.t_first_token - j.t_gen)
-            tbt.append(
-                (j.t_complete - j.t_first_token) / max(j.n_output - 1, 1)
-            )
-        if management == "joint":
-            ok = j.e2e <= j.b_total
-        else:
-            ok = (
-                j.e2e <= j.b_total
-                and t_comm <= b_comm
-                and t_comp <= b_comp
-            )
-        sat += int(ok)
+        failed = j.dropped or math.isnan(j.t_complete)
+        ok = False
+        if not failed:
+            t_comm = j.t_comm
+            t_comp = j.t_complete - j.t_compute_arrival
+            comm.append(t_comm)
+            comp.append(t_comp)
+            e2e.append(j.e2e)
+            tps.append((j.n_input + j.n_output) / j.e2e)
+            if not math.isnan(j.t_first_token):
+                # user-perceived TTFT: generation to first output token (the
+                # same clock as e2e, so comm delay counts against it)
+                ttft.append(j.t_first_token - j.t_gen)
+                tbt.append(
+                    (j.t_complete - j.t_first_token) / max(j.n_output - 1, 1)
+                )
+            if management == "joint":
+                ok = j.e2e <= j.b_total
+            else:
+                ok = (
+                    j.e2e <= j.b_total
+                    and t_comm <= b_comm
+                    and t_comp <= b_comp
+                )
+            sat += int(ok)
+        if n_win:
+            w = min(int((j.t_gen - t_lo) / window_s), n_win - 1)
+            win_n[w] += 1
+            win_sat[w] += int(ok)
+            win_drop[w] += int(failed)
     n_dropped = sum(1 for j in scored if j.dropped or math.isnan(j.t_complete))
+    windows = None
+    if n_win:
+        # a window with no generated jobs has no satisfaction to report
+        # (None, not a vacuous 1.0 that would inflate transient averages)
+        windows = [
+            {
+                "t0": t_lo + w * window_s,
+                "t1": min(t_lo + (w + 1) * window_s, t_hi),
+                "n": win_n[w],
+                "satisfaction": win_sat[w] / win_n[w] if win_n[w] else None,
+                "drop_rate": win_drop[w] / win_n[w] if win_n[w] else None,
+            }
+            for w in range(n_win)
+        ]
 
     def pct(xs: List[float], q: float) -> Optional[float]:
         return float(np.percentile(xs, q)) if xs else None
@@ -465,6 +607,7 @@ def score_jobs(
         avg_tbt=float(np.mean(tbt)) if tbt else None,
         p95_tbt=pct(tbt, 95),
         p99_tbt=pct(tbt, 99),
+        windows=windows,
     )
 
 
@@ -474,6 +617,7 @@ def simulate(
     service_time: Optional[Callable[[Job], float]] = None,
     node_factory: Optional[Callable[[], "ComputeNodeProtocol"]] = None,
     fast: bool = True,
+    controller=None,
 ) -> SimResult:
     """Run one slot-stepped simulation and score Def.-1 satisfaction.
 
@@ -483,6 +627,12 @@ def simulate(
     `ComputeNode` configured by `scheme`. Alternatively `node_factory`
     supplies any `ComputeNodeProtocol` implementation (e.g. a configured
     `repro.batching.BatchedComputeNode`); exactly one must be given.
+
+    `controller` (a `repro.control` preset name or Controller instance)
+    runs the joint bandwidth-compute control loop on its epoch: admission
+    gating at generation and urgent-class uplink weights (single-cell runs
+    have no routing to retarget). The idle-slot fast-forward is clamped at
+    controller epochs so the loop observes on schedule even in idle spans.
 
     ``fast=False`` selects the reference draw-per-slot engine (identical
     fixed-seed results, ~4x slower; kept for equivalence testing).
@@ -499,6 +649,12 @@ def simulate(
             drop_infeasible=scheme.drop_infeasible,
             comp_budget=scheme.b_comp if scheme.management == "disjoint" else None,
         )
+    ctl = state = None
+    if controller is not None:
+        from ..control import ControlState, control_epoch, get_controller
+
+        ctl = get_controller(controller)
+        state = ControlState(n_cells=1)
     engine = SlotEngine(
         sim,
         rng,
@@ -506,12 +662,38 @@ def simulate(
         wireline=lambda job, t: scheme.t_wireline,
         deliver=node.submit,
         fast=fast,
+        gate=state.gate if state is not None else None,
     )
     s, n_slots = 0, engine.n_slots
+    if ctl is not None:
+        epoch_slots = max(1, int(round(ctl.epoch_s / engine.slot)))
+        next_epoch = epoch_slots
+        # effective per-job service for the controller's throughput math;
+        # a protocol-conforming node without a latency model falls back to
+        # the scheme's compute sub-budget as a coarse estimate
+        proto = Job(-1, -1, 0.0, sim.n_input, sim.n_output, sim.b_total)
+        if service_time is not None:
+            svc = service_time(proto)
+        else:
+            lm = getattr(node, "lm", None)
+            svc = (
+                lm.job_latency(sim.n_input, sim.n_output)
+                if lm is not None else scheme.b_comp
+            )
+        svc_s = {"node": svc / max(getattr(node, "max_batch", 1), 1)}
     while s < n_slots:
+        if ctl is not None and s >= next_epoch:
+            control_epoch(
+                ctl, state, s * engine.slot, sim.b_total, [engine],
+                [("node", node, 0)], svc_s,
+            )
+            next_epoch += epoch_slots
         if engine.can_skip():
-            # idle-slot fast-forward: jump to the next pre-drawn arrival
-            nxt = engine.next_arrival_at_or_after(s)
+            # idle-slot fast-forward: jump to the next arrival-process
+            # event, clamped at the next controller epoch
+            nxt = engine.next_event_at_or_after(s)
+            if ctl is not None:
+                nxt = min(nxt, next_epoch)
             if nxt > s:
                 engine.skip_slots(s, min(nxt, n_slots))
                 s = nxt

@@ -17,6 +17,11 @@ paper Fig. 5), and names the fleet node that will serve it. Policies:
                       local whenever the local node meets the deadline;
                       otherwise offload to the earliest-finishing node,
                       preferring deadline-feasible ones.
+  * ``controlled``    slack_aware plus the control loop's routing action:
+                      per-node bias (seconds) from the bound ControlState
+                      is added to each completion estimate, so a controller
+                      can shift load RAN <-> MEC on its epoch. Without a
+                      bound state it decides exactly like slack_aware.
 """
 
 from __future__ import annotations
@@ -72,12 +77,18 @@ class LeastLoaded(RoutingPolicy):
 class SlackAware(RoutingPolicy):
     name = "slack_aware"
 
+    def _bias(self, name: str) -> float:
+        return 0.0  # the controlled subclass injects controller retargets
+
     def route(self, job: Job, site: int, now: float) -> str:
         topo = self.topo
         finish: Dict[str, float] = {}
         for name in topo.candidates(site):
             arrival = now + topo.wireline_latency(site, name)
-            finish[name] = topo.nodes[name].predict_finish(job, arrival, now)
+            finish[name] = (
+                topo.nodes[name].predict_finish(job, arrival, now)
+                + self._bias(name)
+            )
 
         local = topo.local_node(site)
         if finish[local] <= job.deadline:
@@ -87,8 +98,30 @@ class SlackAware(RoutingPolicy):
         return min(pool, key=pool.get)
 
 
+class Controlled(SlackAware):
+    """slack_aware with the controller's per-node retargeting bias mixed
+    into every completion estimate. The network simulator binds the run's
+    `ControlState` via `bind_state`; unbound (or with an empty bias map,
+    e.g. under the static preset) the decisions equal slack_aware's."""
+
+    name = "controlled"
+
+    def __init__(self) -> None:
+        super().__init__()
+        self.state = None
+
+    def bind_state(self, state) -> "Controlled":
+        self.state = state
+        return self
+
+    def _bias(self, name: str) -> float:
+        if self.state is None:
+            return 0.0
+        return self.state.node_bias.get(name, 0.0)
+
+
 POLICIES: Dict[str, Type[RoutingPolicy]] = {
-    p.name: p for p in (LocalOnly, MecOnly, LeastLoaded, SlackAware)
+    p.name: p for p in (LocalOnly, MecOnly, LeastLoaded, SlackAware, Controlled)
 }
 
 

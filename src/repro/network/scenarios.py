@@ -4,13 +4,22 @@ The paper hard-codes one workload (Table I: real-time translation on AR
 glasses, 15 in / 15 out tokens, 80 ms budget). Benchmarks and examples
 enumerate this registry instead, so new workloads are one entry — not a
 fork of the sweep script. Each scenario fixes the job shape (tokens in/out,
-uplink payload per token), the per-UE arrival rate, and the E2E budget.
+uplink payload per token), the per-UE arrival rate, and the E2E budget —
+and, since the control subsystem, optionally a non-stationary arrival
+process (`repro.control.arrivals`); ``arrival=None`` keeps the stationary
+Poisson source at `lam_per_ue`. For non-stationary scenarios `lam_per_ue`
+is the rate `config_for_load` provisions the UE population for: the
+*time-average* rate for periodic profiles (diurnal), the *base* rate for
+transient-event profiles (flash_crowd) — there the nominal load is the
+steady state and the spike is the overload on top of it.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List
+from typing import Dict, List, Optional
+
+from ..control.arrivals import ArrivalProcess, DiurnalRate, FlashCrowd
 
 __all__ = ["Scenario", "SCENARIOS", "get_scenario", "list_scenarios"]
 
@@ -22,8 +31,10 @@ class Scenario:
     n_input: int
     n_output: int
     b_total: float  # end-to-end latency budget (s)
-    lam_per_ue: float = 1.0  # jobs/s/UE
+    lam_per_ue: float = 1.0  # jobs/s/UE the load scaling provisions for
+    # (time-average for periodic profiles, base rate for transient ones)
     bytes_per_token: float = 256.0  # uplink payload per prompt token
+    arrival: Optional[ArrivalProcess] = None  # None = stationary Poisson
 
 
 SCENARIOS: Dict[str, Scenario] = {
@@ -66,6 +77,36 @@ SCENARIOS: Dict[str, Scenario] = {
             b_total=4.0,
             lam_per_ue=0.25,
             bytes_per_token=16.0,  # query text only; context joins at the edge
+        ),
+        Scenario(
+            name="diurnal_chat",
+            description=(
+                "chatbot traffic under a diurnal load curve: per-UE rate "
+                "swings 0.05 -> 0.45 jobs/s over a 20 s cycle (a compressed "
+                "day), so provisioning for the mean under-serves the peak"
+            ),
+            n_input=48,
+            n_output=96,
+            b_total=0.600,
+            lam_per_ue=0.25,  # == (base + peak) / 2
+            arrival=DiurnalRate(base=0.05, peak=0.45, period_s=20.0),
+        ),
+        Scenario(
+            name="flash_crowd",
+            description=(
+                "vision-heavy prompts (320-token patch embeddings, ~1.3 Mbit "
+                "uplink each) with a stadium-moment 12x arrival spike over "
+                "t in [4, 6) s: the spike oversubscribes every cell's "
+                "carrier, so equal-share uplink turns into "
+                "everyone-finishes-late — the failure mode online admission "
+                "and urgent-first bandwidth control exist for"
+            ),
+            n_input=320,
+            n_output=24,
+            b_total=0.120,
+            lam_per_ue=0.5,  # base rate; the spike multiplies it by 12
+            bytes_per_token=512.0,
+            arrival=FlashCrowd(base=0.5, spike=6.0, t_start=4.0, t_end=6.0),
         ),
     )
 }

@@ -6,17 +6,35 @@ clears the air interface, the job rides the chosen wireline/backhaul link,
 and the whole fleet of compute nodes advances in lock-step with the slot
 clock. Satisfaction is the paper's Def. 1 under joint management (the
 network layer is ICC-native: one operator owns RAN + compute).
+
+The control subsystem (`repro.control`) plugs in three optional layers:
+
+  * a non-stationary **arrival process** per cell (the scenario's
+    ``arrival`` spec, or a `NetSimConfig.arrival` override);
+  * **mobility** — roaming UEs whose generation rate follows them between
+    cells and whose in-flight uplink bursts are re-homed over Xn at each
+    handover;
+  * an online **controller** on a fixed epoch, observing per-cell backlog
+    and per-node queue pressure and acting on admission, uplink PRB
+    weights, and (with the ``controlled`` policy) routing bias.
+
+The idle-slot fast-forward is clamped at driver events (handovers, burst
+re-injections) and controller epochs, so none can be skipped over.
 """
 
 from __future__ import annotations
 
 import collections
 import dataclasses
+import heapq
 import itertools
-from typing import Dict, List, Union
+import math
+from typing import Dict, List, Optional, Union
 
 import numpy as np
 
+from ..control import MobilityConfig, MobilityModel, bind_arrivals
+from ..control.arrivals import ArrivalProcess
 from ..core.latency_model import LLAMA2_7B, ModelProfile
 from ..core.scheduler import Job
 from ..core.simulator import SimConfig, SimResult, SlotEngine, score_jobs
@@ -39,6 +57,15 @@ class NetSimConfig:
     # (repro.batching token-granular continuous batching)
     node_kind: str = "classic"
     max_batch: int = 8
+    # --- control subsystem (all default-off: results bit-identical) ------
+    # arrival-process override; None = the scenario's own spec (which is
+    # None = stationary Poisson for the pre-control scenarios)
+    arrival: Optional[ArrivalProcess] = None
+    mobility: Optional[MobilityConfig] = None
+    # controller preset name or instance; None = uncontrolled
+    controller: Optional[object] = None
+    # transient-metric window length for score_jobs (None = off)
+    window_s: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -47,6 +74,11 @@ class NetResult:
     total: SimResult  # Def.-1 scoring over every cell's jobs
     per_cell: Dict[str, SimResult]  # keyed by site name
     route_share: Dict[str, float]  # fraction of routed jobs per fleet node
+    controller: Optional[str] = None  # preset name when a control loop ran
+    n_epochs: int = 0  # controller epochs evaluated
+    n_rejected: int = 0  # jobs rejected by admission control
+    n_handovers: int = 0  # mobility handovers executed
+    n_rehomed: int = 0  # in-flight bursts re-homed across Xn
 
     @property
     def satisfaction(self) -> float:
@@ -60,7 +92,12 @@ class NetResult:
         share = " ".join(
             f"{k}={v:.2f}" for k, v in sorted(self.route_share.items())
         )
-        return f"{self.total.row()}  routes: {share}"
+        s = f"{self.total.row()}  routes: {share}"
+        if self.controller:
+            s += f"  ctl={self.controller} rej={self.n_rejected}"
+        if self.n_handovers:
+            s += f"  ho={self.n_handovers}"
+        return s
 
 
 def config_for_load(
@@ -70,10 +107,15 @@ def config_for_load(
     sim_time: float = 10.0,
     warmup: float = 2.0,
     seed: int = 0,
+    **kwargs,
 ) -> NetSimConfig:
     """NetSimConfig generating `load` aggregate jobs/s: the single place
     that maps a nominal rate to a UE population (capacity sweeps, fixed-load
-    benchmark passes, and examples all scale load through here)."""
+    benchmark passes, and examples all scale load through here). For
+    non-stationary scenarios the load is whatever rate the scenario's
+    `lam_per_ue` provisions for (diurnal: the time-average; flash crowd:
+    the pre-spike base). Extra kwargs (controller=, mobility=, window_s=,
+    ...) pass through."""
     total_ues = max(len(topology.sites), int(round(load / scenario.lam_per_ue)))
     return NetSimConfig(
         topology=topology.scaled_ues(total_ues),
@@ -81,6 +123,7 @@ def config_for_load(
         sim_time=sim_time,
         warmup=warmup,
         seed=seed,
+        **kwargs,
     )
 
 
@@ -88,11 +131,14 @@ def simulate_network(
     cfg: NetSimConfig,
     policy: Union[str, RoutingPolicy],
     fast: bool = True,
+    _debug_engines: Optional[list] = None,
 ) -> NetResult:
     """Run one multi-cell simulation under `policy` and score Def. 1.
 
     ``fast=False`` selects the reference draw-per-slot engines (identical
-    fixed-seed results; kept for equivalence testing)."""
+    fixed-seed results; kept for equivalence testing). `_debug_engines`,
+    when a list, receives the per-cell SlotEngines after the run (tests
+    assert job-conservation invariants on the raw timelines)."""
     sc = cfg.scenario
     topo = Topology(
         cfg.topology, model=cfg.model,
@@ -100,11 +146,40 @@ def simulate_network(
     )
     pol = get_policy(policy).bind(topo)
     uid = itertools.count()  # fleet-wide unique job ids
+    sites = cfg.topology.sites
+
+    slots = {s.channel.slot_s for s in sites}
+    if len(slots) != 1:
+        raise ValueError(f"sites must share one slot duration, got {slots}")
+    slot = slots.pop()
+    n_slots = int(math.ceil(cfg.sim_time / slot))
+
+    arrival_spec = cfg.arrival if cfg.arrival is not None else sc.arrival
+    mob = None
+    if cfg.mobility is not None and cfg.mobility.n_roamers > 0:
+        mob = MobilityModel(
+            cfg.mobility,
+            n_cells=len(sites),
+            slot_s=slot,
+            n_slots=n_slots,
+            seed=cfg.seed,
+            static_ues=[s.n_ues for s in sites],
+            xn_s=cfg.topology.t_inter_site,
+        )
+    ctl = state = None
+    if cfg.controller is not None:
+        from ..control import ControlState, control_epoch, get_controller
+
+        ctl = get_controller(cfg.controller)
+        state = ControlState(n_cells=len(sites))
+        if hasattr(pol, "bind_state"):
+            pol.bind_state(state)
 
     engines: List[SlotEngine] = []
-    for i, site in enumerate(cfg.topology.sites):
+    for i, site in enumerate(sites):
+        n_ues = site.n_ues + (mob.n_roamers if mob else 0)
         sim = SimConfig(
-            n_ues=site.n_ues,
+            n_ues=n_ues,
             lam_per_ue=sc.lam_per_ue,
             n_input=sc.n_input,
             n_output=sc.n_output,
@@ -115,6 +190,8 @@ def simulate_network(
             channel=dataclasses.replace(
                 site.channel, bytes_per_token=sc.bytes_per_token
             ),
+            arrivals=arrival_spec,
+            window_s=cfg.window_s,
         )
 
         def wireline(job: Job, t: float, _site: int = i) -> float:
@@ -127,31 +204,102 @@ def simulate_network(
             fn.settle(job)
             fn.node.submit(job)
 
+        seed_i = cfg.seed + 7919 * i
         engines.append(
             SlotEngine(
                 sim,
-                np.random.default_rng(cfg.seed + 7919 * i),
+                np.random.default_rng(seed_i),
                 packet_priority=True,  # ICC-native network (§IV-B)
                 wireline=wireline,
                 deliver=deliver,
                 cell=i,
                 uid_iter=uid,
                 fast=fast,
+                arrivals=bind_arrivals(
+                    arrival_spec,
+                    n_ues=n_ues,
+                    lam_per_ue=sc.lam_per_ue,
+                    slot_s=slot,
+                    n_slots=n_slots,
+                    seed=seed_i,
+                    presence=mob.presence_for_cell(i) if mob else None,
+                ),
+                gate=state.gate if state is not None else None,
             )
         )
+    assert all(e.n_slots == n_slots for e in engines)
 
-    slots = {e.slot for e in engines}
-    if len(slots) != 1:
-        raise ValueError(f"sites must share one slot duration, got {slots}")
+    # driver event queue: mobility handovers (pre-drawn) + the burst
+    # re-injections they schedule; the fast-forward clamps at the head
+    events: list = []
+    eseq = itertools.count()
+    roamer_cell: Dict[int, int] = {}
+    if mob is not None:
+        roamer_cell = {k: k % len(sites) for k in range(mob.n_roamers)}
+        for ev in mob.events:
+            heapq.heappush(events, (ev.slot, next(eseq), "handover", ev))
+    n_handovers = n_rehomed = 0
 
-    # shared slot + shared sim_time => identical n_slots across engines
     nodes = list(topo.nodes.values())
-    s, n_slots = 0, engines[0].n_slots
+    if ctl is not None:
+        epoch_slots = max(1, int(round(ctl.epoch_s / slot)))
+        next_epoch = epoch_slots
+        # effective per-job service per node for the controller's
+        # throughput math (batched nodes amortize across the batch width)
+        svc_s = {
+            fn.name: fn.lm.job_latency(sc.n_input, sc.n_output)
+            / max(getattr(fn.node, "max_batch", 1), 1)
+            for fn in nodes
+        }
+
+    s = 0
     while s < n_slots:
+        while events and events[0][0] <= s:
+            _, _, kind, ev = heapq.heappop(events)
+            now = s * slot
+            if kind == "handover":
+                frm_e = engines[ev.frm]
+                bursts = frm_e.evict_ue(mob.ue_index(ev.frm, ev.roamer))
+                roamer_cell[ev.roamer] = ev.to
+                n_handovers += 1
+                if bursts:
+                    # re-home in-flight uplink state over Xn: the bursts
+                    # resume at the roamer's cell after the transfer latency
+                    t_inj = now + mob.xn_s
+                    s_inj = min(n_slots - 1, int(math.ceil(t_inj / slot)))
+                    for job, bits in bursts:
+                        heapq.heappush(
+                            events,
+                            (s_inj, next(eseq), "inject",
+                             (ev.roamer, job, bits, t_inj)),
+                        )
+                    n_rehomed += len(bursts)
+            else:  # inject
+                roamer, job, bits, t_inj = ev
+                # target the roamer's cell *now*, not at eviction time — a
+                # dwell shorter than the Xn transfer moved the UE again (a
+                # burst landing on its old cell would be stranded there);
+                # a same-slot later handover simply re-evicts and re-homes
+                to = roamer_cell[roamer]
+                job.cell = to
+                engines[to].inject_burst(
+                    mob.ue_index(to, roamer), job, bits, t_inj
+                )
+        if ctl is not None and s >= next_epoch:
+            control_epoch(
+                ctl, state, s * slot, sc.b_total, engines,
+                [(fn.name, fn.node, fn.in_transit) for fn in nodes], svc_s,
+            )
+            next_epoch += epoch_slots
         if all(e.can_skip() for e in engines):
-            # every cell idle: fast-forward to the earliest pre-drawn
-            # arrival anywhere (compute nodes advance by run_until)
-            nxt = min(e.next_arrival_at_or_after(s) for e in engines)
+            # every cell idle: fast-forward to the earliest arrival-process
+            # event anywhere, clamped at driver events and controller
+            # epochs (compute nodes advance by run_until)
+            nxt = min(e.next_event_at_or_after(s) for e in engines)
+            if events:
+                nxt = min(nxt, events[0][0])
+            if ctl is not None:
+                nxt = min(nxt, next_epoch)
             if nxt > s:
                 for e in engines:
                     e.skip_slots(s, min(nxt, n_slots))
@@ -167,6 +315,8 @@ def simulate_network(
         fn.node.run_until(float("inf"))
 
     # ------------------------------------------------------------- scoring
+    if _debug_engines is not None:
+        _debug_engines.extend(engines)
     all_jobs = [j for e in engines for j in e.jobs]
     total = score_jobs(all_jobs, engines[0].sim, pol.name, management="joint")
     per_cell = {
@@ -174,11 +324,19 @@ def simulate_network(
             engines[i].jobs, engines[i].sim, f"{pol.name}/{site.name}",
             management="joint",
         )
-        for i, site in enumerate(cfg.topology.sites)
+        for i, site in enumerate(sites)
     }
     counts = collections.Counter(j.route for j in all_jobs if j.route)
     n_routed = max(sum(counts.values()), 1)
     share = {k: v / n_routed for k, v in counts.items()}
     return NetResult(
-        policy=pol.name, total=total, per_cell=per_cell, route_share=share
+        policy=pol.name,
+        total=total,
+        per_cell=per_cell,
+        route_share=share,
+        controller=ctl.name if ctl is not None else None,
+        n_epochs=state.n_epochs if state is not None else 0,
+        n_rejected=state.total_rejected if state is not None else 0,
+        n_handovers=n_handovers,
+        n_rehomed=n_rehomed,
     )

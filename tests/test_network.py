@@ -171,7 +171,7 @@ class TestRouting:
 
     def test_registry(self):
         assert {"local_only", "mec_only", "least_loaded",
-                "slack_aware"} == set(POLICIES)
+                "slack_aware", "controlled"} == set(POLICIES)
 
 
 class TestNetworkSimulation:
