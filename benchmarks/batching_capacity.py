@@ -1,5 +1,13 @@
 """Continuous-batching service capacity: max-batch x GPU sweep (beyond-paper).
 
+A formatting layer over the declarative experiment API: the grid lives in
+`repro.experiments.batching_capacity_spec` (registered as
+``batching_capacity``; reduced CI settings as ``batching_capacity_quick``),
+one arm per (GPU, max_batch) with a per-GPU rate grid, and this script
+renders the curves + engine probe metrics into the historical report
+shape. Same grids, same seed derivation — the capacity matrix is
+bit-identical to the pre-spec sweep loop.
+
 Sweeps Def.-2 service capacity (alpha = 95 % Def.-1 satisfaction) of a
 single-cell deployment whose compute node is the token-granular
 `BatchedComputeNode`, for max_batch in {1, 4, 8, 16} on A100 / H100 / L4,
@@ -14,15 +22,11 @@ tokens, 4 s budget). Two claims:
     concurrent 2k-context jobs, so max_batch = 16 buys nothing — queueing
     is due to cache, not compute.
 
-The gpu x max_batch x rate x seed grid is one flat task list fanned out
-over a process pool (``--workers``, default one per CPU; ``--workers 1``
-forces the serial path); every point keeps its serial-derived seed, so the
-capacity matrix is identical either way.
-
 Outputs:
   benchmarks/results/batching_capacity.json  full curves + probe metrics
-  BENCH_batching.json (repo root)            capacity matrix, the tracked
-                                             baseline for the PR trajectory
+  BENCH_batching.json (repo root)            tracked baseline: headline
+                                             capacity matrix + the
+                                             ExperimentResult payload
 """
 
 from __future__ import annotations
@@ -30,74 +34,19 @@ from __future__ import annotations
 import argparse
 import json
 import os
-import time
 from typing import Dict, Optional, Sequence
 
-from repro.batching import BatchedComputeNode, KVCache
-from repro.core.capacity import capacity_from_sweep
-from repro.core.channel import ChannelConfig
-from repro.core.latency_model import LLAMA2_7B, LatencyModel
-from repro.core.parallel import parallel_map
+from repro.batching import KVCache
+from repro.core.latency_model import LLAMA2_7B
 from repro.core.scheduler import Job
-from repro.core.simulator import SchemeConfig, SimConfig, simulate
+from repro.experiments import (
+    SCHEMA_VERSION,
+    batching_capacity_spec,
+    run as run_experiment,
+)
+from repro.experiments.registry import BATCHING_BATCHES
 from repro.network.fleet import GPU_SPECS
 from repro.network.scenarios import SCENARIOS
-
-# aggregate-rate grids bracketing each GPU's expected capacity range
-RATE_GRIDS: Dict[str, Sequence[float]] = {
-    "l4": (0.25, 0.5, 1.0, 2.0, 3.0, 4.0, 5.0),
-    "a100": (1.0, 2.0, 3.0, 4.0, 6.0, 8.0, 10.0, 13.0, 16.0),
-    "h100": (2.0, 4.0, 6.0, 9.0, 12.0, 16.0, 22.0, 28.0, 36.0, 44.0),
-}
-BATCHES = (1, 4, 8, 16)
-
-# ICC joint-management stance at the batched node: priority queue,
-# token-granular deadline dropping, RAN-sited wireline latency.
-SCHEME = SchemeConfig("icc_batched", 0.005, True, "priority", "joint")
-
-
-def _point(gpu: str, mb: int, lam: float, seed_idx: int,
-           sim_time: float, warmup: float) -> dict:
-    """One (gpu, max_batch, rate, seed) grid point -> satisfaction + the
-    serving/engine probe metrics (module-level: picklable for the pool)."""
-    sc = SCENARIOS["rag_doc_qa"]
-    lm = LatencyModel(GPU_SPECS[gpu], LLAMA2_7B, fidelity="extended")
-    holder: Dict[str, BatchedComputeNode] = {}
-
-    def factory() -> BatchedComputeNode:
-        holder["node"] = BatchedComputeNode(
-            lm, max_batch=mb, policy=SCHEME.compute_policy,
-            drop_infeasible=SCHEME.drop_infeasible,
-        )
-        return holder["node"]
-
-    cfg = SimConfig(
-        n_ues=max(1, int(round(lam / sc.lam_per_ue))),
-        lam_per_ue=sc.lam_per_ue,
-        n_input=sc.n_input,
-        n_output=sc.n_output,
-        b_total=sc.b_total,
-        sim_time=sim_time,
-        warmup=warmup,
-        seed=1000 * seed_idx,
-        channel=ChannelConfig(bytes_per_token=sc.bytes_per_token),
-    )
-    res = simulate(SCHEME, cfg, node_factory=factory)
-    node = holder["node"]
-    return {
-        "satisfaction": res.satisfaction,
-        "avg_ttft_ms": _ms(res.avg_ttft),
-        "p99_ttft_ms": _ms(res.p99_ttft),
-        "avg_tbt_ms": _ms(res.avg_tbt),
-        "p99_e2e_ms": _ms(res.p99_e2e),
-        "avg_batch": round(node.stats.avg_batch(), 2),
-        "peak_batch": node.stats.peak_batch,
-        "kv_blocked_iterations": node.stats.kv_blocked_iterations,
-        "kv_peak_frac": round(
-            node.stats.peak_kv_bytes / node.kv.capacity_bytes, 3
-        ),
-        "preempted": node.stats.preempted,
-    }
 
 
 def run(
@@ -105,7 +54,7 @@ def run(
     results_name: str = "batching_capacity.json",
     bench_path: str = "BENCH_batching.json",
     gpus: Sequence[str] = ("a100", "h100", "l4"),
-    batches: Sequence[int] = BATCHES,
+    batches: Sequence[int] = BATCHING_BATCHES,
     rate_grids: Optional[Dict[str, Sequence[float]]] = None,
     sim_time: float = 30.0,
     warmup: float = 2.0,
@@ -116,7 +65,10 @@ def run(
     workers: int = 0,
 ) -> dict:
     sc = SCENARIOS["rag_doc_qa"]
-    rate_grids = dict(RATE_GRIDS, **(rate_grids or {}))
+    spec = batching_capacity_spec(
+        gpus=gpus, batches=batches, rate_grids=rate_grids,
+        sim_time=sim_time, warmup=warmup, n_seeds=n_seeds, alpha=alpha,
+    )
     probe_job = Job(uid=-1, ue=0, t_gen=0.0, n_input=sc.n_input,
                     n_output=sc.n_output, b_total=sc.b_total)
     out = {
@@ -128,40 +80,30 @@ def run(
         "gpus": {},
     }
 
-    t_all = time.perf_counter()
-    # flat gpu x max_batch x rate x seed grid through one pool
-    grid = [
-        (gpu, mb, lam)
-        for gpu in gpus for mb in batches for lam in rate_grids[gpu]
-    ]
-    tasks = [
-        (gpu, mb, lam, s, sim_time, warmup)
-        for (gpu, mb, lam) in grid for s in range(n_seeds)
-    ]
-    flat = parallel_map(_point, tasks, workers=workers)
-    by_point = {
-        key: flat[i * n_seeds:(i + 1) * n_seeds]
-        for i, key in enumerate(grid)
-    }
+    result = run_experiment(spec, workers=workers)
 
     for gpu in gpus:
-        spec = GPU_SPECS[gpu]
-        cache_cap = KVCache(spec, LLAMA2_7B).jobs_capacity(probe_job)
-        rates = list(rate_grids[gpu])
+        cache_cap = KVCache(GPU_SPECS[gpu], LLAMA2_7B).jobs_capacity(probe_job)
         out["gpus"][gpu] = {"cache_job_cap": cache_cap, "per_batch": {}}
 
         for mb in batches:
-            curve, probes = [], []
-            for lam in rates:
-                seeds = by_point[(gpu, mb, lam)]
-                sat = sum(p["satisfaction"] for p in seeds) / len(seeds)
-                curve.append(sat)
+            arm = result.arm(f"{gpu}/mb{mb}")
+            rates = arm.curve.rates
+            probes = []
+            for point in arm.points:
                 # probe metrics from the last seed's run (engine counters)
-                probe = dict(seeds[-1], rate=lam, satisfaction=round(sat, 4))
-                probes.append(probe)
+                last = point.seeds[-1]
+                probes.append({
+                    "satisfaction": round(point.mean.satisfaction, 4),
+                    "avg_ttft_ms": _ms(last.result.avg_ttft),
+                    "p99_ttft_ms": _ms(last.result.p99_ttft),
+                    "avg_tbt_ms": _ms(last.result.avg_tbt),
+                    "p99_e2e_ms": _ms(last.result.p99_e2e),
+                    **last.extras,
+                    "rate": point.rate,
+                })
 
-            cap = capacity_from_sweep(rates, curve, alpha=alpha)
-            saturated = all(s >= alpha for s in curve)
+            cap = arm.curve.capacity
             # probe = the highest still-satisfied operating point (serving
             # metrics); stress = the top swept rate, where demand exceeds
             # capacity — that is where cache-vs-compute binding shows.
@@ -176,14 +118,14 @@ def run(
             )
             out["gpus"][gpu]["per_batch"][mb] = {
                 "rates": rates,
-                "satisfaction": [round(s, 4) for s in curve],
+                "satisfaction": [round(s, 4) for s in arm.curve.satisfaction],
                 "capacity": cap,
-                "saturated": saturated,
+                "saturated": arm.curve.saturated,
                 "kv_bound": kv_bound,
                 "probe": probe,
                 "stress": stress,
             }
-            mark = ">=" if saturated else "  "
+            mark = ">=" if arm.curve.saturated else "  "
             print(f"[batching] {gpu:5s} mb={mb:2d} capacity{mark}{cap:6.2f} "
                   f"jobs/s  ttft={probe['avg_ttft_ms']}ms "
                   f"tbt={probe['avg_tbt_ms']}ms  "
@@ -200,13 +142,14 @@ def run(
         out["gpus"][gpu]["gain_best_vs_mb1"] = (
             per[best]["capacity"] / mb1_cap - 1.0 if mb1_cap > 0 else None
         )
-    out["wall_clock_s"] = round(time.perf_counter() - t_all, 2)
+    out["wall_clock_s"] = result.wall_clock_s
 
     os.makedirs(out_dir, exist_ok=True)
     with open(os.path.join(out_dir, results_name), "w") as f:
         json.dump(out, f, indent=1)
-    # compact tracked baseline: the capacity matrix + the two claim flags
-    baseline = {
+    # tracked baseline: the capacity matrix + claim flags, wrapped with the
+    # schema'd ExperimentResult payload (validate-bench checks it)
+    headline = {
         "scenario": sc.name,
         "capacity": {
             gpu: {str(mb): d["per_batch"][mb]["capacity"] for mb in batches}
@@ -228,8 +171,14 @@ def run(
         "n_seeds": n_seeds,
         "wall_clock_s": out["wall_clock_s"],
     }
+    baseline = {
+        "schema_version": SCHEMA_VERSION,
+        "experiment": spec.name,
+        "headline": headline,
+        "result": result.to_dict(points="none"),
+    }
     with open(bench_path, "w") as f:
-        json.dump(baseline, f, indent=1)
+        json.dump(baseline, f, indent=1, sort_keys=True)
     for gpu, d in out["gpus"].items():
         gain = d["gain_best_vs_mb1"]
         gain_s = (f"+{gain:.0%} vs mb=1" if gain is not None

@@ -1,5 +1,14 @@
 """Joint bandwidth-compute control under a flash crowd (beyond-paper).
 
+A formatting layer over the declarative experiment API: the arms live in
+`repro.experiments.control_capacity_spec` (registered as
+``control_capacity``; reduced CI settings as ``control_capacity_quick``) —
+six flash-crowd arms, a diurnal no-harm pass, and a mobility exercise,
+all fixed-load single-rate arms scored on windowed transient
+satisfaction — and this script renders the windows into the historical
+report shape. Same arms, same seed derivation — the headline numbers are
+bit-identical to the pre-spec loop.
+
 The flash_crowd scenario (320-token vision prompts, 12x arrival spike over
 t in [4, 6) s, 120 ms budget) oversubscribes every cell's uplink carrier
 and the compute fleet at once. Static routing policies — however good
@@ -12,17 +21,11 @@ PRB share, and re-targets routing by observed queue pressure — admitted
 jobs ride a clean carrier and finish inside the budget, and the system
 snaps back the moment the spike ends.
 
-Arms: every static routing policy uncontrolled, `reactive` (threshold
-admission + PRB boost, no routing action), and the joint controller. Each
-is scored on windowed (transient) Def.-1 satisfaction: the spike windows,
-their minimum, and the post-spike recovery, seed-averaged. A diurnal pass
-(`diurnal_chat`) checks the controller does no harm on gentle, compute-
-bound non-stationarity, and a mobility pass exercises Xn handovers with
-in-flight re-homing at benchmark scale.
-
 Outputs:
   benchmarks/results/control_capacity.json  full windowed curves per arm
-  BENCH_control.json (repo root)            the tracked headline baseline
+  BENCH_control.json (repo root)            tracked baseline: headline
+                                            numbers + the ExperimentResult
+                                            payload
 """
 
 from __future__ import annotations
@@ -30,39 +33,21 @@ from __future__ import annotations
 import argparse
 import json
 import os
-import time
 from typing import Optional
 
 import numpy as np
 
-from repro.control import MobilityConfig
-from repro.core.capacity import mean_over_seeds
-from repro.core.parallel import parallel_map
-from repro.network import SCENARIOS, config_for_load, simulate_network, three_cell_hetero
-
-WINDOW_S = 0.5
-
-# arm name -> (routing policy, controller preset)
-ARMS = {
-    "local_only": ("local_only", None),
-    "mec_only": ("mec_only", None),
-    "least_loaded": ("least_loaded", None),
-    "slack_aware": ("slack_aware", None),
-    "reactive": ("slack_aware", "reactive"),
-    "slack_aware_joint": ("controlled", "slack_aware_joint"),
-}
-STATIC_ARMS = [a for a, (_, c) in ARMS.items() if c is None]
-
-
-def _point(scenario_name, load, sim_time, warmup, policy, controller,
-           mobility, seed):
-    """One (arm, seed) run (module-level: picklable for the pool)."""
-    cfg = config_for_load(
-        three_cell_hetero(), SCENARIOS[scenario_name], load,
-        sim_time=sim_time, warmup=warmup, seed=seed,
-        window_s=WINDOW_S, controller=controller, mobility=mobility,
-    )
-    return simulate_network(cfg, policy)
+from repro.experiments import (
+    SCHEMA_VERSION,
+    control_capacity_spec,
+    run as run_experiment,
+)
+from repro.experiments.registry import (
+    CONTROL_ARMS as ARMS,
+    CONTROL_STATIC_ARMS as STATIC_ARMS,
+    CONTROL_WINDOW_S as WINDOW_S,
+)
+from repro.network import SCENARIOS
 
 
 def _window_stats(windows, spike):
@@ -91,7 +76,10 @@ def run(
 ) -> dict:
     sc = SCENARIOS["flash_crowd"]
     spike = (sc.arrival.t_start, sc.arrival.t_end)
-    diurnal_seeds = n_seeds if diurnal_seeds is None else diurnal_seeds
+    spec = control_capacity_spec(
+        load=load, sim_time=sim_time, warmup=warmup,
+        n_seeds=n_seeds, diurnal_seeds=diurnal_seeds,
+    )
     out = {
         "scenario": "flash_crowd",
         "load_jobs_per_s": load,
@@ -103,26 +91,21 @@ def run(
         "diurnal": {},
         "mobility": {},
     }
-    t_start = time.perf_counter()
+
+    result = run_experiment(spec, workers=workers)
 
     # ------------------------------------------------ flash-crowd arms
-    arm_names = list(ARMS)
-    tasks = [
-        ("flash_crowd", load, sim_time, warmup, pol, ctl, None, 1000 * s)
-        for name in arm_names
-        for pol, ctl in [ARMS[name]]
-        for s in range(n_seeds)
-    ]
-    flat = parallel_map(_point, tasks, workers=workers)
-    for i, name in enumerate(arm_names):
-        seeds = flat[i * n_seeds:(i + 1) * n_seeds]
-        total = mean_over_seeds([r.total for r in seeds], name)
+    for name in ARMS:
+        point = result.arm(name).points[0]
+        total = point.mean
         stats = _window_stats(total.windows, spike)
         out["arms"][name] = {
             "satisfaction": round(total.satisfaction, 4),
             "drop_rate": round(total.drop_rate, 4),
             **{k: round(v, 4) for k, v in stats.items()},
-            "rejected": int(np.mean([r.n_rejected for r in seeds])),
+            "rejected": int(np.mean(
+                [s.extras["n_rejected"] for s in point.seeds]
+            )),
             "windows": [
                 {k: round(v, 4) if isinstance(v, float) else v
                  for k, v in w.items()}
@@ -135,40 +118,32 @@ def run(
               f"recovery={a['recovery_sat']:.3f} rej={a['rejected']}")
 
     # ------------------------------------------------ diurnal no-harm
-    d_arms = ["slack_aware", "slack_aware_joint"]
-    tasks = [
-        ("diurnal_chat", load, max(sim_time, 12.0), warmup,
-         ARMS[name][0], ARMS[name][1], None, 1000 * s)
-        for name in d_arms for s in range(diurnal_seeds)
-    ]
-    flat = parallel_map(_point, tasks, workers=workers)
-    for i, name in enumerate(d_arms):
-        seeds = flat[i * diurnal_seeds:(i + 1) * diurnal_seeds]
+    for name in ("slack_aware", "slack_aware_joint"):
+        point = result.arm(f"diurnal/{name}").points[0]
         out["diurnal"][name] = {
-            "satisfaction": round(
-                float(np.mean([r.satisfaction for r in seeds])), 4),
-            "rejected": int(np.mean([r.n_rejected for r in seeds])),
+            "satisfaction": round(float(np.mean(
+                [s.result.satisfaction for s in point.seeds]
+            )), 4),
+            "rejected": int(np.mean(
+                [s.extras["n_rejected"] for s in point.seeds]
+            )),
         }
         print(f"[control] diurnal {name:18s} "
               f"sat={out['diurnal'][name]['satisfaction']:.3f}")
 
     # ------------------------------------------------ mobility exercise
-    mob = MobilityConfig(n_roamers=6, dwell_mean_s=0.5)
-    tasks = [
-        ("flash_crowd", load, sim_time, warmup,
-         ARMS[name][0], ARMS[name][1], mob, 1000 * s)
-        for name in ("slack_aware", "slack_aware_joint")
-        for s in range(min(n_seeds, 2))
-    ]
-    flat = parallel_map(_point, tasks, workers=workers)
-    ns = min(n_seeds, 2)
-    for i, name in enumerate(("slack_aware", "slack_aware_joint")):
-        seeds = flat[i * ns:(i + 1) * ns]
+    for name in ("slack_aware", "slack_aware_joint"):
+        point = result.arm(f"mobility/{name}").points[0]
         out["mobility"][name] = {
-            "satisfaction": round(
-                float(np.mean([r.satisfaction for r in seeds])), 4),
-            "handovers": int(np.mean([r.n_handovers for r in seeds])),
-            "rehomed": int(np.mean([r.n_rehomed for r in seeds])),
+            "satisfaction": round(float(np.mean(
+                [s.result.satisfaction for s in point.seeds]
+            )), 4),
+            "handovers": int(np.mean(
+                [s.extras["n_handovers"] for s in point.seeds]
+            )),
+            "rehomed": int(np.mean(
+                [s.extras["n_rehomed"] for s in point.seeds]
+            )),
         }
         m = out["mobility"][name]
         print(f"[control] mobile  {name:18s} sat={m['satisfaction']:.3f} "
@@ -188,12 +163,12 @@ def run(
         "joint_recovery_sat": joint["recovery_sat"],
         "best_static_recovery_sat": ref["recovery_sat"],
     }
-    out["wall_clock_s"] = round(time.perf_counter() - t_start, 2)
+    out["wall_clock_s"] = result.wall_clock_s
 
     os.makedirs(out_dir, exist_ok=True)
     with open(os.path.join(out_dir, results_name), "w") as f:
         json.dump(out, f, indent=1)
-    baseline = {
+    headline = {
         "spike_sat": {a: out["arms"][a]["spike_sat"] for a in out["arms"]},
         "spike_min_sat": {
             a: out["arms"][a]["spike_min_sat"] for a in out["arms"]
@@ -212,8 +187,14 @@ def run(
         "n_seeds": n_seeds,
         "wall_clock_s": out["wall_clock_s"],
     }
+    baseline = {
+        "schema_version": SCHEMA_VERSION,
+        "experiment": spec.name,
+        "headline": headline,
+        "result": result.to_dict(points="none"),
+    }
     with open(bench_path, "w") as f:
-        json.dump(baseline, f, indent=1)
+        json.dump(baseline, f, indent=1, sort_keys=True)
     print(f"[control] joint vs best static ({best_static}): "
           f"{out['headline']['joint_vs_best_static_spike']:.2f}x spike-window "
           f"sat, recovery {joint['recovery_sat']:.2f} vs "

@@ -1,20 +1,26 @@
 """Network-level service capacity per routing policy (beyond-paper).
 
+A formatting layer over the declarative experiment API: the grid lives in
+`repro.experiments.network_capacity_spec` (registered as
+``network_capacity``; reduced CI settings as ``network_capacity_quick``),
+the sweep runs through the one `repro.experiments.run` runner, and this
+script renders the curves into the historical report shape. Same grids,
+same seed derivation — the capacity numbers are bit-identical to the
+pre-spec sweep loop.
+
 Sweeps aggregate arrival rate over the 3-cell heterogeneous deployment
 (`three_cell_hetero`: 2xH100 site, GH200 site, compute-less small cell,
 pooled GH200 MEC) for every routing policy, and reads off Def.-2 capacity
-at alpha = 95 %. Also enumerates the scenario registry at a fixed load so
-every workload (not just Table I) exercises the fleet.
-
-The whole policy x rate x seed grid is one flat task list fanned out over a
-process pool (``--workers``, default one per CPU; ``--workers 1`` forces
-the serial path). Every point keeps its serial-derived seed, so the
-capacity numbers are identical either way.
+at alpha = 95 %. Also enumerates the scenario registry at a fixed load
+(the ``network_scenarios`` experiment) so every workload — not just
+Table I — exercises the fleet.
 
 Outputs:
   benchmarks/results/network_capacity.json   full curves + per-scenario sat
-  BENCH_network.json (repo root)             capacity per policy + sweep
-                                             wall-clock, the tracked baseline
+  BENCH_network.json (repo root)             tracked baseline: headline
+                                             numbers + the ExperimentResult
+                                             payload (validate-bench checks
+                                             its schema)
 """
 
 from __future__ import annotations
@@ -22,28 +28,17 @@ from __future__ import annotations
 import argparse
 import json
 import os
-import time
 from typing import Dict, Optional, Sequence
 
-import numpy as np
-
-from repro.core.capacity import capacity_from_sweep, network_point
-from repro.core.parallel import parallel_map
-from repro.network import (
-    POLICIES,
-    SCENARIOS,
-    config_for_load,
-    simulate_network,
-    three_cell_hetero,
+from repro.experiments import (
+    SCHEMA_VERSION,
+    network_capacity_spec,
+    network_scenarios_spec,
+    run as run_experiment,
 )
 
 # fixed aggregate load (jobs/s) for the non-sweep scenario pass
 SCENARIO_LOADS: Dict[str, float] = {"chatbot": 20.0, "vision_prompt": 15.0}
-
-
-def _scenario_point(topo, scenario, load, sim_time, warmup, policy):
-    cfg = config_for_load(topo, scenario, load, sim_time=sim_time, warmup=warmup)
-    return simulate_network(cfg, policy).satisfaction
 
 
 def run(
@@ -60,13 +55,12 @@ def run(
     scenario_loads: Optional[Dict[str, float]] = None,
     workers: int = 0,
 ) -> dict:
-    rates = list(rates or range(30, 191, 10))
     scenario_loads = SCENARIO_LOADS if scenario_loads is None else scenario_loads
-    topo = three_cell_hetero()
-    scenario = SCENARIOS["ar_translation"]
-    # "controlled" without a bound controller decides exactly like
-    # slack_aware — it is benchmarked in control_capacity, not here
-    policies = sorted(p for p in POLICIES if p != "controlled")
+    spec = network_capacity_spec(
+        rates=rates, sim_time=sim_time, warmup=warmup,
+        n_seeds=n_seeds, alpha=alpha,
+    )
+    rates = [float(r) for r in spec.sweep.rates]
     out = {
         "rates": rates,
         "alpha": alpha,
@@ -77,47 +71,37 @@ def run(
         "scenarios": {},
     }
 
-    t_sweep = time.perf_counter()
-    # one flat policy x rate x seed grid through the pool
-    tasks = [
-        (topo, scenario, pol, sim_time, warmup, 0, True, float(lam), s)
-        for pol in policies for lam in rates for s in range(n_seeds)
-    ]
-    flat = parallel_map(network_point, tasks, workers=workers)
-    per_policy = len(rates) * n_seeds
-    for p_idx, name in enumerate(policies):
-        block = flat[p_idx * per_policy:(p_idx + 1) * per_policy]
-        curve = [
-            float(np.mean([r.satisfaction
-                           for r in block[i * n_seeds:(i + 1) * n_seeds]]))
-            for i in range(len(rates))
-        ]
-        cap = capacity_from_sweep(rates, curve, alpha=alpha)
-        saturated = all(s >= alpha for s in curve)  # never crossed: lower bound
-        out["policies"][name] = {
-            "satisfaction": [round(s, 4) for s in curve],
-            "capacity": cap,
-            "saturated": saturated,
+    result = run_experiment(spec, workers=workers)
+    for arm in result.arms:
+        c = arm.curve
+        out["policies"][arm.name] = {
+            "satisfaction": [round(s, 4) for s in c.satisfaction],
+            "capacity": c.capacity,
+            "saturated": c.saturated,
         }
-        mark = ">=" if saturated else "  "
-        print(f"[network] {name:13s} capacity{mark}{cap:6.1f} jobs/s  "
-              f"curve={['%.2f' % s for s in curve]}")
-    out["sweep_wall_clock_s"] = round(time.perf_counter() - t_sweep, 2)
+        mark = ">=" if c.saturated else "  "
+        print(f"[network] {arm.name:13s} capacity{mark}{c.capacity:6.1f} jobs/s  "
+              f"curve={['%.2f' % s for s in c.satisfaction]}")
+    out["sweep_wall_clock_s"] = result.wall_clock_s
 
     # one fixed-load pass per non-default scenario, every policy
-    sc_tasks = [
-        (topo, SCENARIOS[sc_name], load, sim_time, warmup, pol)
-        for sc_name, load in scenario_loads.items() for pol in policies
-    ]
-    sc_flat = parallel_map(_scenario_point, sc_tasks, workers=workers)
-    for i, (sc_name, load) in enumerate(scenario_loads.items()):
-        sats = sc_flat[i * len(policies):(i + 1) * len(policies)]
-        out["scenarios"][sc_name] = {
-            "load_jobs_per_s": load,
-            "satisfaction": {p: round(s, 4) for p, s in zip(policies, sats)},
-        }
-        print(f"[network] scenario {sc_name:14s} @ {load:.0f}/s: "
-              f"{out['scenarios'][sc_name]['satisfaction']}")
+    if scenario_loads:
+        sc_spec = network_scenarios_spec(
+            scenario_loads, sim_time=sim_time, warmup=warmup
+        )
+        sc_res = run_experiment(sc_spec, workers=workers)
+        for sc_name, load in scenario_loads.items():
+            sats = {
+                arm.name.split("/", 1)[1]: arm.curve.satisfaction[0]
+                for arm in sc_res.arms
+                if arm.name.startswith(f"{sc_name}/")
+            }
+            out["scenarios"][sc_name] = {
+                "load_jobs_per_s": load,
+                "satisfaction": {p: round(s, 4) for p, s in sats.items()},
+            }
+            print(f"[network] scenario {sc_name:14s} @ {load:.0f}/s: "
+                  f"{out['scenarios'][sc_name]['satisfaction']}")
 
     best = max(out["policies"], key=lambda p: out["policies"][p]["capacity"])
     out["best_policy"] = best
@@ -130,8 +114,9 @@ def run(
     os.makedirs(out_dir, exist_ok=True)
     with open(os.path.join(out_dir, results_name), "w") as f:
         json.dump(out, f, indent=1)
-    # compact tracked baseline for the perf trajectory across PRs
-    baseline = {
+    # tracked baseline: compact headline numbers + the schema'd result
+    # payload (python -m repro.experiments validate-bench checks it)
+    headline = {
         "capacity_per_policy": {
             p: out["policies"][p]["capacity"] for p in out["policies"]
         },
@@ -143,8 +128,14 @@ def run(
         "sim_time": sim_time,
         "n_seeds": n_seeds,
     }
+    baseline = {
+        "schema_version": SCHEMA_VERSION,
+        "experiment": spec.name,
+        "headline": headline,
+        "result": result.to_dict(points="none"),
+    }
     with open(bench_path, "w") as f:
-        json.dump(baseline, f, indent=1)
+        json.dump(baseline, f, indent=1, sort_keys=True)
     print(f"[network] best={best}  slack_aware vs mec_only: "
           f"+{out['gain_slack_vs_mec']:.1%}  "
           f"(sweep {out['sweep_wall_clock_s']:.0f}s)")

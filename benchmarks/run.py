@@ -94,7 +94,10 @@ def main(quick: bool = False, workers: int = -1) -> int:
     # reduced sweep: keep the full-fidelity outputs of
     # `python -m benchmarks.network_capacity` (tracked BENCH_network.json
     # baseline + results/network_capacity.json) intact. Quick mode uses the
-    # exact configs perf_speedup timed into BENCH_perf.json quick_ref_s.
+    # exact configs perf_speedup timed into BENCH_perf.json quick_ref_s —
+    # the same grids registered as the *_quick experiment specs (pinned
+    # against each other in tests/test_experiments.py), so this drives the
+    # registered quick variants through repro.experiments.run.
     net_kw = dict(QUICK_NETWORK_KW) if quick else dict(QUICK_NETWORK_KW, sim_time=5.0)
     t0 = time.perf_counter()
     rn = network_capacity.run(results_name="network_capacity_quick.json",
@@ -193,7 +196,17 @@ def main(quick: bool = False, workers: int = -1) -> int:
         print(f"{name},{value},{derived}")
 
     if quick:
-        return _check_perf_quick(timings)
+        rc = _check_perf_quick(timings)
+        # the tracked BENCH_* baselines must keep parsing against the
+        # unified ExperimentResult schema (repro.experiments.validate)
+        from repro.experiments import validate_bench
+
+        problems = validate_bench()
+        for p in problems:
+            print(f"[validate-bench] {p}")
+        if not problems:
+            print("[validate-bench] tracked baselines OK")
+        return rc or (1 if problems else 0)
     return 0
 
 

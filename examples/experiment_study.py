@@ -1,0 +1,52 @@
+"""Imagine a new scenario in one file: define it, spec it, measure it.
+
+A custom workload (bursty multimodal assistant prompts on smart glasses),
+registered as a first-class scenario, swept over the heterogeneous 3-cell
+fleet with the joint bandwidth-compute controller on vs off — all through
+the declarative experiment API: one spec, one `run()`, one result schema.
+
+    PYTHONPATH=src python examples/experiment_study.py
+"""
+
+import dataclasses
+
+from repro.control.arrivals import MMPP
+from repro.experiments import (
+    ControlSpec, ExperimentSpec, SweepSpec, SystemSpec, VariantSpec,
+    WorkloadSpec, run,
+)
+from repro.network import Scenario, register_scenario
+
+# A workload nobody shipped: camera-assisted chat with bursty on/off usage
+# (an MMPP source: ~1.2 s active bursts at 1.5 prompts/s, quiet between).
+register_scenario(Scenario(
+    name="glasses_assistant",
+    description="bursty multimodal assistant prompts on smart glasses",
+    n_input=120, n_output=40, b_total=0.300,
+    lam_per_ue=0.4, bytes_per_token=384.0,
+    arrival=MMPP(rate_on=1.5, rate_off=0.05, mean_on_s=1.2, mean_off_s=4.0),
+), replace=True)
+
+system = SystemSpec(kind="multi_cell", topology="three_cell_hetero")
+spec = ExperimentSpec(
+    name="glasses_assistant_study",
+    description="does joint control pay off under bursty multimodal load?",
+    workload=WorkloadSpec(scenario="glasses_assistant"),
+    system=system,
+    sweep=SweepSpec(rates=(10.0, 20.0, 30.0, 40.0), n_seeds=2,
+                    sim_time=6.0, warmup=1.0),
+    variants=(
+        VariantSpec(name="uncontrolled", system=system),
+        VariantSpec(name="joint_control",
+                    system=dataclasses.replace(system, policy="controlled"),
+                    control=ControlSpec(controller="slack_aware_joint")),
+    ),
+)
+
+if __name__ == "__main__":
+    print(spec.to_json()[:400] + " ...\n")  # the spec IS the experiment
+    result = run(spec, workers="auto")
+    print(result.summary())
+    base, ctl = result.arm("uncontrolled"), result.arm("joint_control")
+    print(f"\nDef.-2 capacity: uncontrolled {base.curve.capacity:.1f} jobs/s, "
+          f"joint control {ctl.curve.capacity:.1f} jobs/s")

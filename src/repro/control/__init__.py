@@ -37,7 +37,14 @@ from .controllers import (
     control_epoch,
 )
 from .mobility import HandoverEvent, MobilityConfig, MobilityModel
-from .policy import CONTROLLERS, ControlState, get_controller, list_controllers
+from .policy import (
+    CONTROLLERS,
+    ControllerLike,
+    ControlState,
+    get_controller,
+    list_controllers,
+    validate_controller,
+)
 
 __all__ = [
     "MMPP",
@@ -62,6 +69,8 @@ __all__ = [
     "MobilityModel",
     "CONTROLLERS",
     "ControlState",
+    "ControllerLike",
     "get_controller",
     "list_controllers",
+    "validate_controller",
 ]

@@ -20,12 +20,44 @@ from .controllers import (
     StaticController,
 )
 
-__all__ = ["CONTROLLERS", "ControlState", "get_controller", "list_controllers"]
+__all__ = [
+    "CONTROLLERS",
+    "ControlState",
+    "ControllerLike",
+    "get_controller",
+    "list_controllers",
+    "validate_controller",
+]
 
 CONTROLLERS = {
     c.name: c
     for c in (StaticController, ReactiveController, SlackAwareJointController)
 }
+
+# The one controller-argument type every surface accepts: a preset name or
+# a Controller instance. `simulate(controller=)`, `NetSimConfig.controller`,
+# and `repro.experiments.ControlSpec.controller` all take this alias (names
+# are validated eagerly via `validate_controller`, not deep inside a run).
+ControllerLike = Union[str, "Controller"]
+
+
+def validate_controller(controller) -> None:
+    """Raise on an unknown preset name or a non-controller object; None
+    and Controller instances pass. Cheap: safe to call at config/spec
+    construction so typos fail before any simulation starts."""
+    if controller is None or isinstance(controller, Controller):
+        return
+    if isinstance(controller, str):
+        if controller not in CONTROLLERS:
+            raise KeyError(
+                f"unknown controller {controller!r}; "
+                f"known: {sorted(CONTROLLERS)}"
+            )
+        return
+    raise TypeError(
+        f"controller must be a preset name or Controller instance, "
+        f"got {type(controller).__name__}"
+    )
 
 
 def get_controller(controller: Union[str, Controller]) -> Controller:

@@ -9,6 +9,12 @@ All sweeps share one (rate x seed) grid runner, `run_grid`, which can fan
 the points out over a process pool (`workers=`, opt-in): every point is an
 independent simulation with its own derived seed, so parallel and serial
 runs aggregate the exact same numbers in the exact same order.
+
+The canonical sweep surface is now `repro.experiments` (a declarative
+`ExperimentSpec` through one `run()`); `network_sweep` below is a
+compatibility wrapper over it, and `sweep`/`sweep_generic` remain the
+thin callable-based paths for service-time models that cannot be
+spec'd (arbitrary callables; `ModelService` covers the analytic case).
 """
 
 from __future__ import annotations
@@ -209,21 +215,61 @@ def network_sweep(
 ) -> List[float]:
     """Network-level satisfaction curve for one routing policy.
 
-    `arrival_rates` are aggregate jobs/s across the whole deployment; the
-    UE population is rescaled per rate and redistributed across sites in
-    proportion to the topology's configured populations. Returns the
-    seed-averaged satisfaction per rate (feed to `capacity_from_sweep`).
-    `extra` forwards NetSimConfig fields (controller=, mobility=, ...).
+    Compatibility wrapper over `repro.experiments.run`: the arguments are
+    translated into a one-arm `ExperimentSpec` (same seed derivation, same
+    `config_for_load` construction — results are bit-identical to the
+    historical sweep loop). `arrival_rates` are aggregate jobs/s across
+    the whole deployment; returns the seed-averaged satisfaction per rate
+    (feed to `capacity_from_sweep`). `extra` forwards NetSimConfig fields
+    (controller=, mobility=, arrival=, node_kind=, max_batch=, model=,
+    window_s=).
     """
-    from ..network.scenarios import SCENARIOS
+    from ..experiments import (
+        ControlSpec,
+        ExperimentSpec,
+        SweepSpec,
+        SystemSpec,
+        WorkloadSpec,
+    )
+    from ..experiments.runner import run as run_experiment
 
-    run_one = functools.partial(
-        network_point, topology, scenario or SCENARIOS["ar_translation"],
-        policy, sim_time, warmup, base_seed, fast, extra=extra,
+    kw = dict(extra or {})
+    system = SystemSpec(
+        kind="multi_cell",
+        topology=topology,
+        policy=policy,
+        node_kind=kw.pop("node_kind", "classic"),
+        max_batch=kw.pop("max_batch", 8),
+        model=kw.pop("model", "llama2-7b"),
     )
-    return sweep_generic(
-        arrival_rates, run_one, n_seeds=n_seeds, workers=workers, chunk=chunk
+    workload = WorkloadSpec(
+        scenario=scenario if scenario is not None else "ar_translation",
+        arrival=kw.pop("arrival", None),
+        mobility=kw.pop("mobility", None),
     )
+    control = ControlSpec(controller=kw.pop("controller", None))
+    sweep_spec = SweepSpec(
+        rates=tuple(float(r) for r in arrival_rates),
+        n_seeds=n_seeds,
+        base_seed=base_seed,
+        sim_time=sim_time,
+        warmup=warmup,
+        window_s=kw.pop("window_s", None),
+        fast=fast,
+    )
+    if kw:
+        raise TypeError(
+            f"unsupported extra fields for network_sweep: {sorted(kw)}"
+        )
+    spec = ExperimentSpec(
+        name="network_sweep",
+        workload=workload,
+        system=system,
+        sweep=sweep_spec,
+        control=control,
+    )
+    result = run_experiment(spec, workers=workers, chunk=chunk)
+    return list(result.arms[0].curve.satisfaction)
 
 
 def capacity_from_sweep(

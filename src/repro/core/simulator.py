@@ -617,7 +617,7 @@ def simulate(
     service_time: Optional[Callable[[Job], float]] = None,
     node_factory: Optional[Callable[[], "ComputeNodeProtocol"]] = None,
     fast: bool = True,
-    controller=None,
+    controller: "Optional[ControllerLike]" = None,
 ) -> SimResult:
     """Run one slot-stepped simulation and score Def.-1 satisfaction.
 
@@ -639,6 +639,10 @@ def simulate(
     """
     if (service_time is None) == (node_factory is None):
         raise ValueError("pass exactly one of service_time / node_factory")
+    if controller is not None:
+        from ..control import validate_controller
+
+        validate_controller(controller)  # unknown presets fail before setup
     rng = np.random.default_rng(sim.seed)
     if node_factory is not None:
         node = node_factory()

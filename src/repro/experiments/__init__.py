@@ -1,0 +1,80 @@
+"""repro.experiments — the unified declarative experiment API.
+
+One spec, one runner, one result schema: every capacity study in this
+repo — the paper's single-cell ICC-vs-MEC comparison, the multi-cell
+routing sweeps, the batched-serving matrix, the flash-crowd control
+arms — is an `ExperimentSpec` (a frozen, JSON-round-trippable dataclass
+tree) executed by `run()` into an `ExperimentResult` (per-point
+`SimResult`s, Def.-1/Def.-2 `CapacityCurve`s, spec echo, schema version).
+
+  spec.py      the spec tree + exact to_dict/from_dict/JSON codec
+  registry.py  register_experiment/get_experiment + the shipped grids
+               (the tracked benchmarks, and their *_quick CI variants)
+  runner.py    run(spec): one flat (arm x rate x seed) grid through one
+               process pool, dispatching per arm to the single-cell or
+               multi-cell engine
+  result.py    the unified result schema + stable JSON emission
+  validate.py  schema checks for the tracked BENCH_*.json baselines
+
+CLI:  python -m repro.experiments list
+      python -m repro.experiments show <name>
+      python -m repro.experiments run <name> [--workers N] [--quick]
+                                             [--out f.json] [--points ...]
+      python -m repro.experiments validate-bench [files...]
+"""
+
+from .registry import (
+    batching_capacity_spec,
+    control_capacity_spec,
+    get_experiment,
+    list_experiments,
+    network_capacity_spec,
+    network_scenarios_spec,
+    register_experiment,
+)
+from .result import (
+    ArmResult,
+    CapacityCurve,
+    ExperimentResult,
+    PointResult,
+    PointRun,
+)
+from .runner import run
+from .spec import (
+    MODEL_PROFILES,
+    SCHEMA_VERSION,
+    TOPOLOGIES,
+    ControlSpec,
+    ExperimentSpec,
+    SweepSpec,
+    SystemSpec,
+    VariantSpec,
+    WorkloadSpec,
+)
+from .validate import validate_bench
+
+__all__ = [
+    "SCHEMA_VERSION",
+    "MODEL_PROFILES",
+    "TOPOLOGIES",
+    "WorkloadSpec",
+    "SystemSpec",
+    "ControlSpec",
+    "SweepSpec",
+    "VariantSpec",
+    "ExperimentSpec",
+    "ArmResult",
+    "CapacityCurve",
+    "ExperimentResult",
+    "PointResult",
+    "PointRun",
+    "run",
+    "register_experiment",
+    "get_experiment",
+    "list_experiments",
+    "network_capacity_spec",
+    "network_scenarios_spec",
+    "batching_capacity_spec",
+    "control_capacity_spec",
+    "validate_bench",
+]

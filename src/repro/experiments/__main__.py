@@ -1,0 +1,95 @@
+"""CLI for the declarative experiment layer.
+
+    python -m repro.experiments list
+    python -m repro.experiments show network_capacity
+    python -m repro.experiments run network_capacity --workers -1 \
+        --out benchmarks/results/network_capacity_run.json
+    python -m repro.experiments run network_capacity --quick
+    python -m repro.experiments validate-bench
+
+``run --quick`` resolves the registered ``<name>_quick`` variant — the
+same reduced grids CI drives — and, like every reduced output, should be
+pointed at ``benchmarks/results/`` (never the tracked repo-root
+baselines, which only the full benchmark scripts regenerate).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+from .registry import get_experiment, list_experiments
+from .runner import run
+from .validate import validate_bench
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.experiments", description=__doc__
+    )
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    sub.add_parser("list", help="registered experiment names + arm counts")
+
+    p_show = sub.add_parser("show", help="print a registered spec as JSON")
+    p_show.add_argument("name")
+
+    p_run = sub.add_parser("run", help="run a registered experiment")
+    p_run.add_argument("name")
+    p_run.add_argument("--quick", action="store_true",
+                       help="run the registered <name>_quick variant")
+    p_run.add_argument("--workers", type=int, default=None,
+                       help="process pool size (-1 = one per CPU; default: "
+                            "the spec's own setting)")
+    p_run.add_argument("--out", default=None,
+                       help="write the ExperimentResult JSON here")
+    p_run.add_argument("--points", choices=("full", "mean", "none"),
+                       default="mean",
+                       help="per-point detail in --out (default: mean)")
+
+    p_val = sub.add_parser(
+        "validate-bench",
+        help="check tracked BENCH_*.json baselines against the result schema",
+    )
+    p_val.add_argument("paths", nargs="*",
+                       help="explicit files (default: the tracked baselines)")
+
+    args = ap.parse_args(argv)
+
+    if args.cmd == "list":
+        for name in list_experiments():
+            spec = get_experiment(name)
+            arms = spec.resolve_arms()
+            print(f"{name:28s} {len(arms):3d} arms  {spec.description}")
+        return 0
+
+    if args.cmd == "show":
+        print(get_experiment(args.name).to_json())
+        return 0
+
+    if args.cmd == "run":
+        name = f"{args.name}_quick" if args.quick else args.name
+        spec = get_experiment(name)
+        result = run(spec, workers=args.workers)
+        print(result.summary())
+        if args.out:
+            with open(args.out, "w") as f:
+                f.write(result.to_json(points=args.points))
+            print(f"wrote {args.out}")
+        return 0
+
+    if args.cmd == "validate-bench":
+        problems = validate_bench(args.paths or None)
+        if problems:
+            for p in problems:
+                print(f"[validate-bench] {p}")
+            return 1
+        print("[validate-bench] all tracked baselines parse against the "
+              "ExperimentResult schema")
+        return 0
+
+    return 2  # unreachable: subparsers are required
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,179 @@
+"""Unified experiment results: one schema for every capacity study.
+
+`run(spec)` returns an `ExperimentResult`: per-arm `CapacityCurve`s
+(the Def.-1 satisfaction curve over the rate grid, the interpolated Def.-2
+capacity, and the `saturated` flag marking curves that never crossed
+alpha in the swept range — a lower bound, not a capacity), per-point
+per-seed `SimResult`s with engine counters (`extras`: KV-cache pressure,
+route shares, admission rejections, handovers), the spec echo, wall-clock,
+and a schema version. ``to_dict``/``from_dict`` round-trip the whole tree;
+``to_json`` emits stable (sorted-key) JSON, the form the tracked
+``BENCH_*.json`` baselines store and ``validate-bench`` checks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, List, Optional
+
+from ..core.simulator import SimResult
+from .spec import SCHEMA_VERSION, ExperimentSpec
+
+__all__ = [
+    "PointRun",
+    "PointResult",
+    "CapacityCurve",
+    "ArmResult",
+    "ExperimentResult",
+]
+
+
+@dataclasses.dataclass
+class PointRun:
+    """One simulation: a scored `SimResult` plus engine counters that live
+    outside Def.-1 scoring (batched-node KV/batch stats, network route
+    shares, controller admission counts, mobility handovers)."""
+
+    result: SimResult
+    extras: Dict[str, object] = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class PointResult:
+    """One rate on one arm's grid: the per-seed runs + their seed-mean
+    (`core.capacity.mean_over_seeds`: NaN-safe, window-pooling)."""
+
+    rate: float
+    mean: SimResult
+    seeds: List[PointRun]
+
+
+@dataclasses.dataclass
+class CapacityCurve:
+    """Def.-1 satisfaction over the rate grid and the Def.-2 readout."""
+
+    rates: List[float]
+    satisfaction: List[float]  # seed-averaged Def.-1 satisfaction per rate
+    capacity: float  # lambda*: largest rate holding satisfaction >= alpha
+    saturated: bool  # curve never crossed alpha: capacity is a lower bound
+    alpha: float
+
+
+@dataclasses.dataclass
+class ArmResult:
+    name: str
+    curve: CapacityCurve
+    points: List[PointResult]
+
+
+@dataclasses.dataclass
+class ExperimentResult:
+    experiment: str
+    spec: ExperimentSpec
+    arms: List[ArmResult]
+    wall_clock_s: float
+    schema_version: int = SCHEMA_VERSION
+
+    def arm(self, name: str) -> ArmResult:
+        for a in self.arms:
+            if a.name == name:
+                return a
+        raise KeyError(
+            f"no arm {name!r}; known: {[a.name for a in self.arms]}"
+        )
+
+    # ---------------------------------------------------------- serialize
+    def to_dict(self, points: str = "full") -> dict:
+        """`points` controls per-point detail: "full" (per-seed SimResults
+        + extras), "mean" (seed-means only), "none" (curves only — the
+        compact form tracked baselines store)."""
+        if points not in ("full", "mean", "none"):
+            raise ValueError(f"points must be full/mean/none, got {points!r}")
+
+        def enc_point(p: PointResult) -> dict:
+            d = {"rate": p.rate, "mean": dataclasses.asdict(p.mean)}
+            if points == "full":
+                d["seeds"] = [
+                    {"result": dataclasses.asdict(s.result),
+                     "extras": dict(s.extras)}
+                    for s in p.seeds
+                ]
+            return d
+
+        return {
+            "schema_version": self.schema_version,
+            "experiment": self.experiment,
+            "spec": self.spec.to_dict(),
+            "wall_clock_s": self.wall_clock_s,
+            "arms": [
+                {
+                    "name": a.name,
+                    "curve": dataclasses.asdict(a.curve),
+                    "points": (
+                        [] if points == "none"
+                        else [enc_point(p) for p in a.points]
+                    ),
+                }
+                for a in self.arms
+            ],
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ExperimentResult":
+        version = d.get("schema_version")
+        if version != SCHEMA_VERSION:
+            raise ValueError(
+                f"result schema_version {version!r} != supported "
+                f"{SCHEMA_VERSION}"
+            )
+
+        def dec_sim(sd: Optional[dict]) -> Optional[SimResult]:
+            return SimResult(**sd) if sd is not None else None
+
+        arms = []
+        for ad in d["arms"]:
+            points = [
+                PointResult(
+                    rate=pd["rate"],
+                    mean=dec_sim(pd["mean"]),
+                    seeds=[
+                        PointRun(result=dec_sim(sd["result"]),
+                                 extras=dict(sd.get("extras", {})))
+                        for sd in pd.get("seeds", [])
+                    ],
+                )
+                for pd in ad.get("points", [])
+            ]
+            arms.append(
+                ArmResult(
+                    name=ad["name"],
+                    curve=CapacityCurve(**ad["curve"]),
+                    points=points,
+                )
+            )
+        return cls(
+            experiment=d["experiment"],
+            spec=ExperimentSpec.from_dict(d["spec"]),
+            arms=arms,
+            wall_clock_s=d["wall_clock_s"],
+            schema_version=version,
+        )
+
+    def to_json(self, points: str = "full") -> str:
+        return json.dumps(self.to_dict(points=points), indent=1, sort_keys=True)
+
+    # ------------------------------------------------------------ display
+    def summary(self) -> str:
+        lines = [f"experiment {self.experiment}  "
+                 f"({len(self.arms)} arms, {self.wall_clock_s:.1f}s)"]
+        for a in self.arms:
+            c = a.curve
+            mark = ">=" if c.saturated else "  "
+            lines.append(
+                f"  {a.name:24s} capacity{mark}{c.capacity:8.2f} jobs/s  "
+                f"sat@{c.rates[0]:g}={c.satisfaction[0]:.3f}"
+                + (f"  sat@{c.rates[-1]:g}={c.satisfaction[-1]:.3f}"
+                   if len(c.rates) > 1 else "")
+            )
+        return "\n".join(lines)

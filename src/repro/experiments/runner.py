@@ -1,0 +1,215 @@
+"""The one experiment runner: spec in, `ExperimentResult` out.
+
+`run(spec)` resolves the spec's arms, flattens every (arm, rate, seed)
+point into one task list, fans it over `repro.core.parallel.parallel_map`
+(results identical to serial at any worker/chunk setting — each point
+derives its own seed), and regroups into per-arm capacity curves. Each
+point dispatches to the engine its `SystemSpec` names:
+
+  multi_cell  -> `repro.network.simulate_network` via `config_for_load`
+                 (the exact construction `benchmarks` historically used,
+                 so spec-driven reruns of the tracked grids are
+                 bit-identical)
+  single_cell -> `repro.core.simulate` with either the analytic
+                 `ModelService` (classic nodes) or a configured
+                 `repro.batching.BatchedComputeNode` factory (batched)
+
+The controller/arrivals/window asymmetry between the two engines is
+normalized here: `ControlSpec.controller`, `WorkloadSpec.arrival` /
+`.mobility`, and `SweepSpec.window_s` map onto ``simulate(controller=)`` +
+``SimConfig.arrivals/window_s`` for single-cell runs and onto the
+corresponding `NetSimConfig` fields for multi-cell runs — a spec never
+cares which engine serves it (mobility is multi-cell only: single-cell
+runs reject it eagerly).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Union
+
+from ..core.capacity import capacity_from_sweep, mean_over_seeds
+from ..core.channel import ChannelConfig
+from ..core.latency_model import LatencyModel, ModelService
+from ..core.parallel import parallel_map
+from ..core.simulator import SimConfig, simulate
+from .result import (
+    ArmResult,
+    CapacityCurve,
+    ExperimentResult,
+    PointResult,
+    PointRun,
+)
+from .spec import (
+    ExperimentSpec,
+    ResolvedArm,
+    resolve_gpu,
+    resolve_model,
+    resolve_scenario,
+    resolve_scheme,
+    resolve_topology,
+)
+
+__all__ = ["run", "run_point"]
+
+
+def _single_cell_point(arm: ResolvedArm, lam: float, seed_idx: int) -> PointRun:
+    sc = resolve_scenario(arm.workload.scenario)
+    scheme = resolve_scheme(arm.system.scheme)
+    hw = resolve_gpu(arm.system.gpu)
+    if arm.system.gpu_count > 1:
+        hw = hw.scaled(arm.system.gpu_count)
+    profile = resolve_model(arm.system.model)
+    sw = arm.sweep
+    # same fallback as the multi-cell engine: an explicit workload-level
+    # arrival overrides, else the scenario's own process applies
+    arrival = (
+        arm.workload.arrival if arm.workload.arrival is not None
+        else sc.arrival
+    )
+    cfg = SimConfig(
+        n_ues=max(1, int(round(lam / sc.lam_per_ue))),
+        lam_per_ue=sc.lam_per_ue,
+        n_input=sc.n_input,
+        n_output=sc.n_output,
+        b_total=sc.b_total,
+        sim_time=sw.sim_time,
+        warmup=sw.warmup,
+        seed=sw.base_seed + 1000 * seed_idx,
+        channel=ChannelConfig(bytes_per_token=sc.bytes_per_token),
+        arrivals=arrival,
+        window_s=sw.window_s,
+    )
+    if arm.system.node_kind == "batched":
+        from ..batching import BatchedComputeNode
+
+        lm = LatencyModel(hw, profile,
+                          fidelity=arm.system.fidelity or "extended")
+        holder: Dict[str, BatchedComputeNode] = {}
+
+        def factory() -> BatchedComputeNode:
+            holder["node"] = BatchedComputeNode(
+                lm,
+                max_batch=arm.system.max_batch,
+                policy=scheme.compute_policy,
+                drop_infeasible=scheme.drop_infeasible,
+            )
+            return holder["node"]
+
+        res = simulate(scheme, cfg, node_factory=factory, fast=sw.fast,
+                       controller=arm.control.controller)
+        node = holder["node"]
+        extras = {
+            "avg_batch": round(node.stats.avg_batch(), 2),
+            "peak_batch": node.stats.peak_batch,
+            "kv_blocked_iterations": node.stats.kv_blocked_iterations,
+            "kv_peak_frac": round(
+                node.stats.peak_kv_bytes / node.kv.capacity_bytes, 3
+            ),
+            "preempted": node.stats.preempted,
+        }
+    else:
+        svc = ModelService(hw, profile,
+                           fidelity=arm.system.fidelity or "paper")
+        res = simulate(scheme, cfg, svc, fast=sw.fast,
+                       controller=arm.control.controller)
+        extras = {}
+    return PointRun(result=res, extras=extras)
+
+
+def _multi_cell_point(arm: ResolvedArm, lam: float, seed_idx: int) -> PointRun:
+    from ..network.simulator import config_for_load, simulate_network
+
+    sw = arm.sweep
+    cfg = config_for_load(
+        resolve_topology(arm.system.topology),
+        resolve_scenario(arm.workload.scenario),
+        lam,
+        sim_time=sw.sim_time,
+        warmup=sw.warmup,
+        seed=sw.base_seed + 1000 * seed_idx,
+        model=resolve_model(arm.system.model),
+        node_kind=arm.system.node_kind,
+        max_batch=arm.system.max_batch,
+        arrival=arm.workload.arrival,
+        mobility=arm.workload.mobility,
+        controller=arm.control.controller,
+        window_s=sw.window_s,
+    )
+    net = simulate_network(cfg, arm.system.policy, fast=sw.fast)
+    extras = {
+        "route_share": dict(net.route_share),
+        "n_rejected": net.n_rejected,
+        "n_handovers": net.n_handovers,
+        "n_rehomed": net.n_rehomed,
+        "n_epochs": net.n_epochs,
+        "per_cell_satisfaction": {
+            cell: r.satisfaction for cell, r in net.per_cell.items()
+        },
+    }
+    return PointRun(result=net.total, extras=extras)
+
+
+def run_point(arm: ResolvedArm, lam: float, seed_idx: int) -> PointRun:
+    """One (arm, rate, seed) grid point (module-level: picklable)."""
+    if arm.system.kind == "multi_cell":
+        return _multi_cell_point(arm, lam, seed_idx)
+    if arm.workload.mobility is not None:
+        raise ValueError("mobility requires a multi_cell system")
+    return _single_cell_point(arm, lam, seed_idx)
+
+
+def run(
+    spec: ExperimentSpec,
+    workers: Union[int, str, None] = None,
+    chunk: Union[int, str, None] = None,
+) -> ExperimentResult:
+    """Run every arm of `spec` and return the unified result.
+
+    `workers`/`chunk` override the spec's `SweepSpec.workers` pool sizing
+    (execution knobs, not part of the experiment's identity); results are
+    identical at any setting. The whole experiment — all arms — flattens
+    through a single pool so small arms don't serialize behind big ones.
+    """
+    spec.validate()
+    arms = spec.resolve_arms()
+    if workers is None:
+        workers = spec.sweep.workers
+    tasks = [
+        (arm, float(lam), s)
+        for arm in arms
+        for lam in arm.sweep.rates
+        for s in range(arm.sweep.n_seeds)
+    ]
+    t0 = time.perf_counter()
+    flat = parallel_map(run_point, tasks, workers=workers, chunk=chunk)
+    wall = time.perf_counter() - t0
+
+    out: List[ArmResult] = []
+    cursor = 0
+    for arm in arms:
+        rates = [float(r) for r in arm.sweep.rates]
+        n_seeds = arm.sweep.n_seeds
+        points: List[PointResult] = []
+        for lam in rates:
+            seeds = flat[cursor:cursor + n_seeds]
+            cursor += n_seeds
+            mean = mean_over_seeds([p.result for p in seeds], arm.name)
+            points.append(PointResult(rate=lam, mean=mean, seeds=seeds))
+        sats = [p.mean.satisfaction for p in points]
+        alpha = arm.sweep.alpha
+        curve = CapacityCurve(
+            rates=rates,
+            satisfaction=sats,
+            capacity=capacity_from_sweep(rates, sats, alpha=alpha),
+            saturated=all(s >= alpha for s in sats),
+            alpha=alpha,
+        )
+        out.append(ArmResult(name=arm.name, curve=curve, points=points))
+    assert cursor == len(flat)
+    return ExperimentResult(
+        experiment=spec.name,
+        spec=spec,
+        arms=out,
+        wall_clock_s=round(wall, 2),
+    )

@@ -1,0 +1,102 @@
+"""Schema validation for the tracked benchmark baselines.
+
+Every tracked capacity baseline (``BENCH_network.json``,
+``BENCH_batching.json``, ``BENCH_control.json``) is a wrapper around an
+`ExperimentResult` payload:
+
+    {
+      "schema_version": <int>,      # must match the current schema
+      "experiment": "<name>",       # the registered spec it was run from
+      "headline": {...},            # the benchmark's compact claim numbers
+      "result": {ExperimentResult.to_dict(points="none")},
+    }
+
+``validate_bench()`` re-parses each file through the real
+``ExperimentResult.from_dict`` (so the spec echo, curves, and version all
+round-trip) and cross-checks internal consistency. CI runs it after the
+quick benchmark pass: accidental schema drift — or a hand-edited baseline
+— fails loudly instead of silently de-synchronizing the tracked numbers
+from the code that reads them.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import List, Optional, Sequence
+
+from .result import ExperimentResult
+from .spec import SCHEMA_VERSION
+
+__all__ = ["BENCH_BASELINES", "validate_bench", "validate_bench_file"]
+
+# repo-root tracked baselines produced by the three capacity benchmarks
+BENCH_BASELINES = (
+    "BENCH_network.json",
+    "BENCH_batching.json",
+    "BENCH_control.json",
+)
+
+
+def validate_bench_file(path: str) -> List[str]:
+    """Validate one tracked baseline; returns a list of problems (empty =
+    valid)."""
+    problems: List[str] = []
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as exc:
+        return [f"{path}: unreadable ({exc})"]
+
+    version = doc.get("schema_version")
+    if version != SCHEMA_VERSION:
+        problems.append(
+            f"{path}: schema_version {version!r} != current {SCHEMA_VERSION} "
+            "(regenerate the baseline or bump deliberately)"
+        )
+    for key in ("experiment", "headline", "result"):
+        if key not in doc:
+            problems.append(f"{path}: missing required key {key!r}")
+    if problems:
+        return problems
+
+    try:
+        result = ExperimentResult.from_dict(doc["result"])
+    except (KeyError, TypeError, ValueError) as exc:
+        return [f"{path}: result payload does not parse as an "
+                f"ExperimentResult ({exc})"]
+
+    if result.experiment != doc["experiment"]:
+        problems.append(
+            f"{path}: experiment {doc['experiment']!r} != result's "
+            f"{result.experiment!r}"
+        )
+    if not result.arms:
+        problems.append(f"{path}: result has no arms")
+    for arm in result.arms:
+        c = arm.curve
+        if len(c.rates) != len(c.satisfaction):
+            problems.append(
+                f"{path}: arm {arm.name!r} curve has {len(c.rates)} rates "
+                f"but {len(c.satisfaction)} satisfaction points"
+            )
+    # the spec echo must itself round-trip (from_dict already decoded it;
+    # re-encode to prove the loop closes)
+    reparsed = type(result.spec).from_dict(result.spec.to_dict())
+    if reparsed != result.spec:
+        problems.append(f"{path}: spec echo does not round-trip")
+    return problems
+
+
+def validate_bench(
+    paths: Optional[Sequence[str]] = None, root: str = "."
+) -> List[str]:
+    """Validate the tracked baselines (or explicit `paths`); returns all
+    problems found. Missing default baselines are reported — a tracked
+    file disappearing is exactly the drift this check exists to catch."""
+    if paths is None:
+        paths = [os.path.join(root, p) for p in BENCH_BASELINES]
+    problems: List[str] = []
+    for p in paths:
+        problems.extend(validate_bench_file(p))
+    return problems

@@ -16,7 +16,13 @@ Layout:
 
 from .fleet import GPU_SPECS, FleetNode, build_fleet_node
 from .routing import POLICIES, RoutingPolicy, get_policy
-from .scenarios import SCENARIOS, Scenario, get_scenario, list_scenarios
+from .scenarios import (
+    SCENARIOS,
+    Scenario,
+    get_scenario,
+    list_scenarios,
+    register_scenario,
+)
 from .simulator import NetResult, NetSimConfig, config_for_load, simulate_network
 from .topology import SiteConfig, Topology, TopologyConfig, three_cell_hetero
 
@@ -31,6 +37,7 @@ __all__ = [
     "Scenario",
     "get_scenario",
     "list_scenarios",
+    "register_scenario",
     "NetResult",
     "NetSimConfig",
     "config_for_load",

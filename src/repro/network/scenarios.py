@@ -21,7 +21,13 @@ from typing import Dict, List, Optional
 
 from ..control.arrivals import ArrivalProcess, DiurnalRate, FlashCrowd
 
-__all__ = ["Scenario", "SCENARIOS", "get_scenario", "list_scenarios"]
+__all__ = [
+    "Scenario",
+    "SCENARIOS",
+    "get_scenario",
+    "list_scenarios",
+    "register_scenario",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -110,6 +116,23 @@ SCENARIOS: Dict[str, Scenario] = {
         ),
     )
 }
+
+
+def register_scenario(scenario: Scenario, *, replace: bool = False) -> Scenario:
+    """Add `scenario` to the registry (the public path for new workloads —
+    benchmarks, experiment specs, and `config_for_load` all look names up
+    here). Duplicate names raise unless ``replace=True``: silently
+    shadowing a shipped scenario would quietly change what every spec
+    referencing that name measures."""
+    if not isinstance(scenario, Scenario):
+        raise TypeError(f"expected Scenario, got {type(scenario).__name__}")
+    if not replace and scenario.name in SCENARIOS:
+        raise ValueError(
+            f"scenario {scenario.name!r} is already registered; pass "
+            "replace=True to override it deliberately"
+        )
+    SCENARIOS[scenario.name] = scenario
+    return scenario
 
 
 def get_scenario(name: str) -> Scenario:

@@ -33,7 +33,13 @@ from typing import Dict, List, Optional, Union
 
 import numpy as np
 
-from ..control import MobilityConfig, MobilityModel, bind_arrivals
+from ..control import (
+    ControllerLike,
+    MobilityConfig,
+    MobilityModel,
+    bind_arrivals,
+    validate_controller,
+)
 from ..control.arrivals import ArrivalProcess
 from ..core.latency_model import LLAMA2_7B, ModelProfile
 from ..core.scheduler import Job
@@ -62,10 +68,15 @@ class NetSimConfig:
     # None = stationary Poisson for the pre-control scenarios)
     arrival: Optional[ArrivalProcess] = None
     mobility: Optional[MobilityConfig] = None
-    # controller preset name or instance; None = uncontrolled
-    controller: Optional[object] = None
+    # controller preset name or instance (repro.control.ControllerLike);
+    # None = uncontrolled. Preset names are validated at construction —
+    # a typo fails here, not deep inside the run.
+    controller: Optional[ControllerLike] = None
     # transient-metric window length for score_jobs (None = off)
     window_s: Optional[float] = None
+
+    def __post_init__(self):
+        validate_controller(self.controller)
 
 
 @dataclasses.dataclass

@@ -1,0 +1,436 @@
+"""Tests for the declarative experiment API (repro.experiments).
+
+Covers: exact spec round-trips for every registered experiment, the
+pinned-golden JSON schema guard, registry duplicate protection, eager
+validation of registry references (controllers, scenarios, policies,
+GPUs), result-schema round-trips, validate-bench, and — most importantly —
+that the unified runner reproduces the legacy sweep paths bit-identically
+(same configs, same seed derivation)."""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+import pytest
+
+from repro.control import MobilityConfig
+from repro.control.arrivals import FlashCrowd
+from repro.core.capacity import capacity_from_sweep, network_point, sweep
+from repro.core.latency_model import GH200_NVL2, LLAMA2_7B, ModelService
+from repro.core.simulator import SCHEMES, SimConfig
+from repro.experiments import (
+    SCHEMA_VERSION,
+    ControlSpec,
+    ExperimentResult,
+    ExperimentSpec,
+    SweepSpec,
+    SystemSpec,
+    VariantSpec,
+    WorkloadSpec,
+    batching_capacity_spec,
+    get_experiment,
+    list_experiments,
+    network_capacity_spec,
+    register_experiment,
+    run,
+    validate_bench,
+)
+from repro.experiments.validate import validate_bench_file
+from repro.network import SCENARIOS, Scenario, register_scenario, three_cell_hetero
+from repro.network.simulator import NetSimConfig
+
+GOLDEN_PATH = os.path.join(
+    os.path.dirname(__file__), "data", "network_capacity_spec.json"
+)
+
+
+# ---------------------------------------------------------------- round-trip
+class TestSpecRoundTrip:
+    def test_every_registered_experiment_round_trips(self):
+        for name in list_experiments():
+            spec = get_experiment(name)
+            # dict round-trip
+            assert ExperimentSpec.from_dict(spec.to_dict()) == spec, name
+            # full JSON round-trip (tuples survive as tuples)
+            assert ExperimentSpec.from_json(spec.to_json()) == spec, name
+
+    def test_inline_trees_round_trip(self):
+        # inline topology, scenario, arrival, mobility — no registry names
+        spec = ExperimentSpec(
+            name="inline",
+            workload=WorkloadSpec(
+                scenario=SCENARIOS["vision_prompt"],
+                arrival=FlashCrowd(base=0.5, spike=4.0, t_start=1.0, t_end=2.0),
+                mobility=MobilityConfig(n_roamers=2),
+            ),
+            system=SystemSpec(kind="multi_cell", topology=three_cell_hetero(),
+                              policy="least_loaded", node_kind="batched",
+                              max_batch=4),
+            sweep=SweepSpec(rates=(10.0, 20.0), n_seeds=2, sim_time=3.0),
+            control=ControlSpec(controller="reactive"),
+            variants=(VariantSpec(name="a", rates=(5.0,)),),
+        )
+        assert ExperimentSpec.from_json(spec.to_json()) == spec
+
+    def test_stable_json_emission(self):
+        spec = get_experiment("network_capacity")
+        assert spec.to_json() == spec.to_json()  # deterministic
+        # sorted keys at every level
+        d = json.loads(spec.to_json())
+        assert list(d) == sorted(d)
+
+    def test_schema_version_mismatch_rejected(self):
+        d = get_experiment("network_capacity").to_dict()
+        d["schema_version"] = SCHEMA_VERSION + 1
+        with pytest.raises(ValueError, match="schema_version"):
+            ExperimentSpec.from_dict(d)
+        # a missing version is equally untrusted (no silent default)
+        del d["schema_version"]
+        with pytest.raises(ValueError, match="schema_version"):
+            ExperimentSpec.from_dict(d)
+
+    def test_unknown_field_rejected(self):
+        d = get_experiment("network_capacity").to_dict()
+        d["bogus_field"] = 1
+        with pytest.raises(ValueError, match="bogus_field"):
+            ExperimentSpec.from_dict(d)
+
+    def test_controller_instance_not_serializable(self):
+        from repro.control import get_controller
+
+        spec = ExperimentSpec(
+            name="inst",
+            workload=WorkloadSpec(),
+            system=SystemSpec(),
+            sweep=SweepSpec(rates=(10.0,)),
+            control=ControlSpec(controller=get_controller("reactive")),
+        )
+        with pytest.raises(TypeError, match="preset names"):
+            spec.to_dict()
+
+
+class TestGoldenSchema:
+    def test_pinned_golden_json(self):
+        """The serialized form of the flagship registered spec is pinned:
+        any change to any spec class changes this JSON, and the fix is a
+        deliberate SCHEMA_VERSION bump + golden regeneration (see
+        tests/data/network_capacity_spec.json), never a silent drift."""
+        with open(GOLDEN_PATH) as f:
+            golden = f.read()
+        spec = get_experiment("network_capacity")
+        assert spec.to_json() == golden.rstrip("\n"), (
+            "spec schema drifted from the pinned golden: bump "
+            "SCHEMA_VERSION and regenerate tests/data/"
+            "network_capacity_spec.json deliberately"
+        )
+        assert json.loads(golden)["schema_version"] == SCHEMA_VERSION
+
+
+# ------------------------------------------------------------------ registry
+class TestRegistry:
+    def test_duplicate_name_guard(self):
+        spec = network_capacity_spec()  # name already registered
+        with pytest.raises(ValueError, match="already registered"):
+            register_experiment(spec)
+        # replace=True is the deliberate override
+        register_experiment(spec, replace=True)
+        assert get_experiment("network_capacity") == spec
+
+    def test_unknown_experiment_lists_known(self):
+        with pytest.raises(KeyError, match="network_capacity"):
+            get_experiment("nope")
+
+    def test_registered_quick_specs_match_ci_grids(self):
+        """The *_quick specs must stay in lockstep with the QUICK_*_KW
+        configs perf_speedup times into BENCH_perf.json quick_ref_s."""
+        perf = pytest.importorskip("benchmarks.perf_speedup")
+        net = network_capacity_spec(
+            name="network_capacity_quick",
+            **{k: v for k, v in perf.QUICK_NETWORK_KW.items()
+               if k != "scenario_loads"},
+        )
+        assert get_experiment("network_capacity_quick") == net
+        bat = batching_capacity_spec(
+            name="batching_capacity_quick", **perf.QUICK_BATCHING_KW
+        )
+        assert get_experiment("batching_capacity_quick") == bat
+
+
+class TestScenarioRegistry:
+    def test_register_scenario_duplicate_guard(self):
+        with pytest.raises(ValueError, match="already registered"):
+            register_scenario(SCENARIOS["chatbot"])
+
+    def test_register_scenario_and_replace(self):
+        sc = Scenario(name="_test_tmp", description="t", n_input=4,
+                      n_output=4, b_total=0.1)
+        try:
+            register_scenario(sc)
+            assert SCENARIOS["_test_tmp"] is sc
+            sc2 = dataclasses.replace(sc, n_input=8)
+            with pytest.raises(ValueError):
+                register_scenario(sc2)
+            register_scenario(sc2, replace=True)
+            assert SCENARIOS["_test_tmp"] is sc2
+        finally:
+            SCENARIOS.pop("_test_tmp", None)
+
+    def test_register_scenario_type_check(self):
+        with pytest.raises(TypeError):
+            register_scenario({"name": "dict_not_scenario"})
+
+
+# ---------------------------------------------------------- eager validation
+class TestEagerValidation:
+    def test_control_spec_unknown_preset(self):
+        with pytest.raises(KeyError, match="slack_aware_joint"):
+            ControlSpec(controller="not_a_preset")
+
+    def test_netsimconfig_unknown_preset_fails_at_construction(self):
+        with pytest.raises(KeyError, match="known"):
+            NetSimConfig(topology=three_cell_hetero(),
+                         controller="not_a_preset")
+
+    def test_netsimconfig_rejects_non_controller_objects(self):
+        with pytest.raises(TypeError, match="preset name or Controller"):
+            NetSimConfig(topology=three_cell_hetero(), controller=42)
+
+    def test_simulate_unknown_preset_fails_before_setup(self):
+        from repro.core.simulator import simulate
+
+        with pytest.raises(KeyError, match="known"):
+            simulate(SCHEMES["icc"], SimConfig(n_ues=1, sim_time=0.1),
+                     lambda j: 0.01, controller="not_a_preset")
+
+    def test_spec_validate_catches_bad_references(self):
+        base = dict(workload=WorkloadSpec(), system=SystemSpec(),
+                    sweep=SweepSpec(rates=(10.0,)))
+        bad_scenario = ExperimentSpec(
+            name="x", **dict(base, workload=WorkloadSpec(scenario="nope")))
+        with pytest.raises(KeyError, match="unknown scenario"):
+            bad_scenario.validate()
+        bad_policy = ExperimentSpec(
+            name="x", **dict(base, system=SystemSpec(policy="nope")))
+        with pytest.raises(KeyError, match="unknown routing policy"):
+            bad_policy.validate()
+        bad_gpu = ExperimentSpec(
+            name="x",
+            **dict(base, system=SystemSpec(kind="single_cell", gpu="nope")))
+        with pytest.raises(KeyError, match="unknown GPU"):
+            bad_gpu.validate()
+        empty_rates = ExperimentSpec(
+            name="x", **dict(base, sweep=SweepSpec(rates=())))
+        with pytest.raises(ValueError, match="empty rate grid"):
+            empty_rates.validate()
+        dup_arms = ExperimentSpec(
+            name="x", **base,
+            variants=(VariantSpec(name="a"), VariantSpec(name="a")))
+        with pytest.raises(ValueError, match="duplicate arm names"):
+            dup_arms.validate()
+
+    def test_control_spec_rejects_non_controller_objects(self):
+        with pytest.raises(TypeError, match="preset name or Controller"):
+            ControlSpec(controller=42)
+
+    def test_multi_cell_unknown_model_fails_validate(self):
+        spec = ExperimentSpec(
+            name="x",
+            workload=WorkloadSpec(),
+            system=SystemSpec(kind="multi_cell", model="no_such_model"),
+            sweep=SweepSpec(rates=(10.0,)),
+        )
+        with pytest.raises(KeyError, match="unknown model profile"):
+            spec.validate()
+
+    def test_single_cell_rejects_mobility(self):
+        spec = ExperimentSpec(
+            name="x",
+            workload=WorkloadSpec(mobility=MobilityConfig(n_roamers=1)),
+            system=SystemSpec(kind="single_cell"),
+            sweep=SweepSpec(rates=(5.0,), n_seeds=1, sim_time=0.5),
+        )
+        # eagerly, before any simulation starts — not per grid point
+        with pytest.raises(ValueError, match="multi_cell"):
+            spec.validate()
+        with pytest.raises(ValueError, match="multi_cell"):
+            run(spec)
+
+
+# ------------------------------------------------------- runner equivalence
+class TestRunnerEquivalence:
+    def test_multi_cell_arm_matches_legacy_network_point(self):
+        spec = network_capacity_spec(rates=[50.0], sim_time=2.0,
+                                     warmup=0.5, n_seeds=2)
+        res = run(spec)
+        topo = three_cell_hetero()
+        sc = SCENARIOS["ar_translation"]
+        for arm in res.arms:
+            point = arm.points[0]
+            for s, pr in enumerate(point.seeds):
+                ref = network_point(topo, sc, arm.name, 2.0, 0.5, 0, True,
+                                    50.0, s)
+                assert ref.total == pr.result
+
+    def test_single_cell_classic_matches_legacy_sweep(self):
+        svc = ModelService(GH200_NVL2.scaled(2), LLAMA2_7B)
+        rates = [40.0, 80.0]
+        base = SimConfig(sim_time=2.0, warmup=0.5, seed=0)
+        legacy = sweep(SCHEMES["icc"], base, rates, svc, n_seeds=2)
+        spec = ExperimentSpec(
+            name="single_cell_icc",
+            workload=WorkloadSpec(scenario="ar_translation"),
+            system=SystemSpec(kind="single_cell", scheme="icc"),
+            sweep=SweepSpec(rates=tuple(rates), n_seeds=2, sim_time=2.0,
+                            warmup=0.5),
+        )
+        res = run(spec)
+        # seed-means are named after the arm, not the scheme; values are
+        # what must match bit-for-bit
+        got = [dataclasses.replace(p.mean, scheme="icc")
+               for p in res.arms[0].points]
+        assert got == legacy
+        assert res.arms[0].curve.capacity == capacity_from_sweep(
+            rates, legacy, alpha=0.95
+        )
+
+    def test_batched_arm_produces_probe_extras(self):
+        # rag_doc_qa's scoring span is [warmup, sim_time - 2*b_total] with
+        # b_total = 4 s, so the horizon must leave a usefully wide window
+        spec = batching_capacity_spec(
+            gpus=("a100",), batches=(4,), rate_grids={"a100": (3.0,)},
+            sim_time=14.0, warmup=1.0, n_seeds=1, name="bat_tiny",
+        )
+        res = run(spec)
+        extras = res.arms[0].points[0].seeds[0].extras
+        for key in ("avg_batch", "peak_batch", "kv_blocked_iterations",
+                    "kv_peak_frac", "preempted"):
+            assert key in extras
+        assert res.arms[0].points[0].mean.avg_ttft is not None
+
+    def test_single_cell_applies_scenario_arrival(self):
+        """A scenario's own arrival process must apply on the single-cell
+        engine exactly as it does multi-cell: flash_crowd single-cell is
+        the spike, not stationary Poisson (regression: the runner once
+        dropped sc.arrival when WorkloadSpec.arrival was None)."""
+        sc = SCENARIOS["flash_crowd"]
+        base = dict(
+            system=SystemSpec(kind="single_cell"),
+            sweep=SweepSpec(rates=(20.0,), n_seeds=1, sim_time=6.0,
+                            warmup=1.0),
+        )
+        implicit = run(ExperimentSpec(
+            name="implicit", workload=WorkloadSpec(scenario="flash_crowd"),
+            **base))
+        explicit = run(ExperimentSpec(
+            name="explicit",
+            workload=WorkloadSpec(scenario="flash_crowd",
+                                  arrival=sc.arrival),
+            **base))
+        a = dataclasses.replace(implicit.arms[0].points[0].mean, scheme="x")
+        b = dataclasses.replace(explicit.arms[0].points[0].mean, scheme="x")
+        assert a == b
+
+    def test_parallel_equals_serial(self):
+        spec = network_capacity_spec(rates=[60.0], sim_time=1.5,
+                                     warmup=0.5, n_seeds=2)
+        serial = run(spec, workers=0)
+        parallel = run(spec, workers=2)
+        for a_s, a_p in zip(serial.arms, parallel.arms):
+            assert a_s.curve.satisfaction == a_p.curve.satisfaction
+            assert [p.mean for p in a_s.points] == [p.mean for p in a_p.points]
+
+    def test_variant_overrides_apply(self):
+        spec = ExperimentSpec(
+            name="x",
+            workload=WorkloadSpec(),
+            system=SystemSpec(),
+            sweep=SweepSpec(rates=(10.0, 20.0), n_seeds=3, sim_time=5.0),
+            variants=(
+                VariantSpec(name="short", rates=(5.0,), n_seeds=1,
+                            sim_time=1.0),
+                VariantSpec(name="inherit"),
+            ),
+        )
+        arms = {a.name: a for a in spec.resolve_arms()}
+        assert arms["short"].sweep.rates == (5.0,)
+        assert arms["short"].sweep.n_seeds == 1
+        assert arms["short"].sweep.sim_time == 1.0
+        assert arms["inherit"].sweep == spec.sweep
+
+
+# ------------------------------------------------------------ result schema
+class TestResultSchema:
+    @pytest.fixture(scope="class")
+    def small_result(self):
+        spec = network_capacity_spec(rates=[60.0], sim_time=1.5,
+                                     warmup=0.5, n_seeds=1)
+        return run(spec)
+
+    def test_result_round_trip_full(self, small_result):
+        d = json.loads(small_result.to_json(points="full"))
+        back = ExperimentResult.from_dict(d)
+        assert back.experiment == small_result.experiment
+        assert back.spec == small_result.spec
+        for a, b in zip(back.arms, small_result.arms):
+            assert a.curve == b.curve
+            assert [p.mean for p in a.points] == [p.mean for p in b.points]
+            assert [s.result for p in a.points for s in p.seeds] == \
+                   [s.result for p in b.points for s in p.seeds]
+
+    def test_result_points_modes(self, small_result):
+        full = small_result.to_dict(points="full")
+        mean = small_result.to_dict(points="mean")
+        none = small_result.to_dict(points="none")
+        assert full["arms"][0]["points"][0]["seeds"]
+        assert "seeds" not in mean["arms"][0]["points"][0]
+        assert none["arms"][0]["points"] == []
+        with pytest.raises(ValueError):
+            small_result.to_dict(points="bogus")
+
+    def test_validate_bench_accepts_wrapped_result(self, small_result, tmp_path):
+        doc = {
+            "schema_version": SCHEMA_VERSION,
+            "experiment": small_result.experiment,
+            "headline": {"capacity": 1.0},
+            "result": small_result.to_dict(points="none"),
+        }
+        p = tmp_path / "BENCH_x.json"
+        p.write_text(json.dumps(doc))
+        assert validate_bench_file(str(p)) == []
+        # drifted version fails loudly
+        doc["schema_version"] = SCHEMA_VERSION + 1
+        p.write_text(json.dumps(doc))
+        assert any("schema_version" in e for e in validate_bench_file(str(p)))
+        # missing keys fail
+        p.write_text(json.dumps({"schema_version": SCHEMA_VERSION}))
+        assert len(validate_bench_file(str(p))) == 3
+
+    def test_validate_bench_tracked_baselines(self):
+        """The repo's own tracked BENCH_* files must parse (run from the
+        repo root, as CI does); skip quietly when invoked elsewhere."""
+        if not os.path.exists("BENCH_network.json"):
+            pytest.skip("not at repo root")
+        assert validate_bench() == []
+
+
+# --------------------------------------------------------------------- CLI
+class TestCLI:
+    def test_list_and_show(self, capsys):
+        from repro.experiments.__main__ import main
+
+        assert main(["list"]) == 0
+        out = capsys.readouterr().out
+        assert "network_capacity" in out and "control_capacity" in out
+        assert main(["show", "batching_capacity"]) == 0
+        shown = capsys.readouterr().out
+        assert ExperimentSpec.from_json(shown) == \
+               get_experiment("batching_capacity")
+
+    def test_validate_bench_cli(self, capsys):
+        from repro.experiments.__main__ import main
+
+        if not os.path.exists("BENCH_network.json"):
+            pytest.skip("not at repo root")
+        assert main(["validate-bench"]) == 0
