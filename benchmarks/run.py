@@ -11,7 +11,11 @@ for the per-PR CI pass; every reduced output lands in
 mode the two simulation sweeps are also wall-clocked into
 ``benchmarks/results/BENCH_perf_quick.json`` and checked against the
 tracked ``BENCH_perf.json`` reference — a >2x regression (generous, to
-absorb runner noise) fails the run.
+absorb runner noise) fails the run. Quick mode also runs the telemetry
+gate: one controlled flash-crowd pass untraced and one under an
+`EventRecorder` — results must be bit-identical, the traced run must stay
+within 2x untraced, and its Chrome trace is written to
+``benchmarks/results/trace_quick.json`` (the CI trace artifact).
 
 ``--workers N`` fans the sweep grids out over N processes (default: one
 per CPU; simulation results are identical to the serial path — every grid
@@ -29,6 +33,10 @@ import time
 PERF_BASELINE = "BENCH_perf.json"  # repo root, tracked
 PERF_QUICK_OUT = "benchmarks/results/BENCH_perf_quick.json"
 PERF_REGRESSION_FACTOR = 2.0
+TRACE_QUICK_OUT = "benchmarks/results/trace_quick.json"  # CI artifact
+# telemetry must stay cheap enough to leave on for any diagnostic rerun:
+# a traced run of the trace-quick workload may cost at most 2x untraced
+TRACE_OVERHEAD_FACTOR = 2.0
 
 
 def _check_perf_quick(timings: dict) -> int:
@@ -54,6 +62,51 @@ def _check_perf_quick(timings: dict) -> int:
                   f"limit {PERF_REGRESSION_FACTOR * ref_s:.1f}s)")
     if failures:
         print("[perf] QUICK-BENCH REGRESSION: " + "; ".join(failures))
+        return 1
+    return 0
+
+
+def _telemetry_overhead_check(timings: dict) -> int:
+    """Quick-mode observability gate: run the controlled flash-crowd
+    workload untraced and traced, require (a) bit-identical results — the
+    recorder observes, it never perturbs — and (b) traced wall-clock
+    within TRACE_OVERHEAD_FACTOR of untraced. The traced run's Chrome
+    trace lands in TRACE_QUICK_OUT as the CI artifact (open at
+    https://ui.perfetto.dev)."""
+    from repro.network import SCENARIOS, config_for_load, three_cell_hetero
+    from repro.network.simulator import simulate_network
+    from repro.telemetry import EventRecorder, write_chrome_trace
+
+    cfg = config_for_load(
+        three_cell_hetero(), SCENARIOS["flash_crowd"], 60.0,
+        sim_time=6.0, warmup=1.0, seed=0,
+        controller="slack_aware_joint", window_s=1.0,
+    )
+    t0 = time.perf_counter()
+    base = simulate_network(cfg, "controlled")
+    t_off = time.perf_counter() - t0
+    rec = EventRecorder()
+    t0 = time.perf_counter()
+    traced = simulate_network(cfg, "controlled", recorder=rec)
+    t_on = time.perf_counter() - t0
+    timings["telemetry_off_s"] = round(t_off, 3)
+    timings["telemetry_on_s"] = round(t_on, 3)
+
+    tel = traced.total.telemetry
+    traced.total.telemetry = None  # compare everything else exactly
+    if base != traced:
+        print("[telemetry] FAIL: traced run diverged from untraced "
+              "(the recorder must not perturb the simulation)")
+        return 1
+    os.makedirs(os.path.dirname(TRACE_QUICK_OUT), exist_ok=True)
+    write_chrome_trace(tel, TRACE_QUICK_OUT)
+    print(f"[telemetry] off={t_off:.2f}s on={t_on:.2f}s "
+          f"({t_on / t_off:.2f}x); trace -> {TRACE_QUICK_OUT} "
+          f"({tel['counts']['jobs']} jobs, {tel['counts']['events']} events)")
+    if t_on > TRACE_OVERHEAD_FACTOR * t_off and t_on - t_off > 1.0:
+        # absolute floor keeps sub-second runs from tripping on noise
+        print(f"[telemetry] OVERHEAD REGRESSION: traced {t_on:.2f}s > "
+              f"{TRACE_OVERHEAD_FACTOR:.0f}x untraced {t_off:.2f}s")
         return 1
     return 0
 
@@ -196,6 +249,7 @@ def main(quick: bool = False, workers: int = -1) -> int:
         print(f"{name},{value},{derived}")
 
     if quick:
+        trc = _telemetry_overhead_check(timings)
         rc = _check_perf_quick(timings)
         # the tracked BENCH_* baselines must keep parsing against the
         # unified ExperimentResult schema (repro.experiments.validate)
@@ -206,7 +260,7 @@ def main(quick: bool = False, workers: int = -1) -> int:
             print(f"[validate-bench] {p}")
         if not problems:
             print("[validate-bench] tracked baselines OK")
-        return rc or (1 if problems else 0)
+        return trc or rc or (1 if problems else 0)
     return 0
 
 

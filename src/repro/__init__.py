@@ -5,6 +5,7 @@ Subpackages:
   core      the paper: queueing analysis, latency model, 5G SLS, scheduler
   network   multi-cell topology, heterogeneous fleet, routing policies
   batching  token-level continuous-batching node + KV-cache admission
+  telemetry trace recorders, stage-latency attribution, Chrome-trace export
   configs   10 assigned architectures (+ the paper's Llama-2-7B)
   models    composable model zoo (dense/moe/ssm/hybrid/vlm/audio)
   kernels   Pallas TPU kernels + jnp oracles

@@ -110,6 +110,10 @@ class BatchedComputeNode:
         self.completed: List[Job] = []
         self.dropped: List[Job] = []
         self.stats = BatchStats()
+        # telemetry (repro.telemetry): drivers wire an *active* recorder
+        # here; every event site is behind a single None-check
+        self.recorder = None
+        self.telemetry_name = "node"
 
     # ------------------------------------------------------------- protocol
     def __len__(self) -> int:
@@ -123,6 +127,11 @@ class BatchedComputeNode:
         key = job.t_compute_arrival if self.policy == "fifo" else job.priority
         heapq.heappush(self._heap, (key, next(self._seq), job))
         self._waiting_work += self._svc_solo(job)
+        if self.recorder is not None:
+            self.recorder.job_event(
+                "queue_enter", job.uid, job.t_compute_arrival,
+                node=self.telemetry_name,
+            )
 
     def estimated_free_at(self, now: float) -> float:
         """Routing's load estimate: earliest time a job arriving now could
@@ -178,6 +187,7 @@ class BatchedComputeNode:
 
     def _admit(self, t: float) -> None:
         """Move queue heads into the batch while slots + KV allow (at time t)."""
+        rec = self.recorder
         while self._heap and len(self._running) < self.max_batch:
             _, _, job = self._heap[0]
             if job.t_compute_arrival > t:
@@ -188,6 +198,8 @@ class BatchedComputeNode:
                 self._waiting_work = max(self._waiting_work - svc, 0.0)
                 job.dropped = True
                 self.dropped.append(job)
+                if rec is not None:
+                    rec.job_event("drop", job.uid, t, stage="queue")
                 continue
             if not self.kv.can_admit(job):
                 if self.kv.job_bytes(job) > self.kv.capacity_bytes:
@@ -196,6 +208,8 @@ class BatchedComputeNode:
                     self._waiting_work = max(self._waiting_work - svc, 0.0)
                     job.dropped = True
                     self.dropped.append(job)
+                    if rec is not None:
+                        rec.job_event("drop", job.uid, t, stage="kv_unservable")
                     continue
                 # Head-of-line blocking by design: admission is strictly in
                 # queue order, the cache is the binding resource.
@@ -205,6 +219,8 @@ class BatchedComputeNode:
             self._waiting_work = max(self._waiting_work - svc, 0.0)
             self.kv.admit(job)
             self._running.append(_Running(job))
+            if rec is not None:
+                rec.job_event("admit", job.uid, t)
 
     def _preempt_expired(self, t: float) -> None:
         """§IV-B dropping at token granularity: a running job whose horizon
@@ -219,6 +235,8 @@ class BatchedComputeNode:
                 r.job.dropped = True
                 self.dropped.append(r.job)
                 self.stats.preempted += 1
+                if self.recorder is not None:
+                    self.recorder.job_event("preempt", r.job.uid, t)
             else:
                 keep.append(r)
         self._running = keep
@@ -230,6 +248,7 @@ class BatchedComputeNode:
         `now` slot by slot so jobs delivered mid-iteration are present for
         the next iteration boundary.
         """
+        rec = self.recorder
         while self.busy_until <= now and (self._running or self._heap):
             t = self.busy_until
             if not self._running:
@@ -246,6 +265,8 @@ class BatchedComputeNode:
                 self.kv.release(r.job)
                 self._running.remove(r)
                 self.completed.append(r.job)
+                if rec is not None:
+                    rec.job_event("complete", r.job.uid, t)
             if not self._running:
                 if not self._heap:
                     break
@@ -281,11 +302,29 @@ class BatchedComputeNode:
 
             if prefiller is not None:
                 prefiller.prefilled += chunk
+                if rec is not None:
+                    rec.job_event(
+                        "prefill", prefiller.job.uid, t_end, dt=dt, tokens=chunk
+                    )
+            if rec is not None:
+                # every resident decode sequence experiences the full
+                # iteration wall-clock (residual iterations — resident but
+                # neither prefilling nor decoding — become `stall`)
+                for r in decode:
+                    rec.job_event("decode", r.job.uid, t_end, dt=dt)
+                rec.sample(f"{self.telemetry_name}.batch", t_end, {
+                    "batch": float(len(self._running)),
+                    "decode": float(len(decode)),
+                    "queued": float(len(self._heap)),
+                    "kv_bytes": float(self.kv.used_bytes),
+                })
             done: List[_Running] = []
             for r in decode:
                 r.generated += 1
                 if r.generated == 1:
                     r.job.t_first_token = t_end
+                    if rec is not None:
+                        rec.job_event("first_token", r.job.uid, t_end)
                 if r.generated >= r.job.n_output:
                     r.job.t_complete = t_end
                     done.append(r)
@@ -293,3 +332,5 @@ class BatchedComputeNode:
                 self.kv.release(r.job)
                 self._running.remove(r)
                 self.completed.append(r.job)
+                if rec is not None:
+                    rec.job_event("complete", r.job.uid, t_end)

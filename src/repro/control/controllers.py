@@ -255,11 +255,16 @@ def control_epoch(
     engines: Sequence,
     node_items: Sequence[Tuple[str, object, int]],
     svc_s: Dict[str, float],
+    recorder=None,
 ) -> Actions:
     """One control-loop turn: advance the nodes to `now` (observations must
     not lag the slot clock across a fast-forward), build the Observation,
     evaluate the controller, apply its Actions to the `ControlState` and
-    the engines' channels. `node_items` is ``(name, node, in_transit)``."""
+    the engines' channels. `node_items` is ``(name, node, in_transit)``.
+
+    `recorder` (an *active* `repro.telemetry` recorder, or None) gets one
+    epoch record per turn: the Observation numbers and the Actions taken
+    (JSON-safe — infinities become None)."""
     for _, node, _ in node_items:
         node.run_until(now)
     cells = [
@@ -308,4 +313,54 @@ def control_epoch(
     state.n_epochs += 1
     state.generated = [0] * n
     state.admitted = [0] * n
+    if recorder is not None:
+        fin = _finite_or_none
+        recorder.epoch(now, {
+            "t": now,
+            "epoch": state.n_epochs,
+            "cells": [
+                {
+                    "cell": c.cell,
+                    "uplink_jobs": c.uplink_jobs,
+                    "uplink_drain_s": c.uplink_drain_s,
+                    "min_slack_s": fin(c.min_slack_s),
+                    "generated": c.generated,
+                    "admitted": c.admitted,
+                }
+                for c in cells
+            ],
+            "nodes": [
+                {
+                    "name": nb.name,
+                    "queue_depth": nb.queue_depth,
+                    "est_wait_s": fin(nb.est_wait_s),
+                    "in_transit": nb.in_transit,
+                }
+                for nb in nodes
+            ],
+            "actions": {
+                "admit": (
+                    {str(c): bool(v) for c, v in actions.admit.items()}
+                    if actions.admit is not None else None
+                ),
+                "quota": (
+                    {str(c): fin(float(v)) for c, v in actions.quota.items()}
+                    if actions.quota is not None else None
+                ),
+                "node_bias": (
+                    {k: fin(float(v)) for k, v in actions.node_bias.items()}
+                    if actions.node_bias is not None else None
+                ),
+                "urgent_boost": (
+                    {str(c): [float(x) for x in v]
+                     for c, v in actions.urgent_boost.items()}
+                    if actions.urgent_boost is not None else None
+                ),
+            },
+        })
     return actions
+
+
+def _finite_or_none(x: float):
+    """JSON-safe epoch-record numbers (min-slack/quota may be inf)."""
+    return x if math.isfinite(x) else None

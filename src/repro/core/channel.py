@@ -224,6 +224,15 @@ class UplinkChannel:
         if self._ready is not None:
             self._to_array_mode()
 
+    def active_ues(self) -> int:
+        """UEs currently occupying the air interface — queued bits or a
+        held grant. The telemetry layer's PRB-occupancy proxy (read-only:
+        works in both list and array mode without touching state)."""
+        if self._ready is not None:
+            return len(self._ready) + len(self._parked)
+        queued = (self.job_bits > 0.0) | (self.bg_bits > 0.0)
+        return int(np.count_nonzero(queued | self.job_granted | self.bg_granted))
+
     def evict_ue(self, ue: int) -> None:
         """Erase `ue`'s uplink state (mobility handover re-homing): queued
         bits, grant flags, and pending scheduling requests. The caller

@@ -19,13 +19,17 @@ with a warning rather than failing the sweep.
 
 from __future__ import annotations
 
+import logging
 import os
-import sys
 from concurrent.futures import ProcessPoolExecutor
 from concurrent.futures.process import BrokenProcessPool
 from typing import Callable, List, Optional, Sequence, Tuple, Union
 
 __all__ = ["resolve_workers", "resolve_chunk", "parallel_map"]
+
+# package logger: sweeps/tests capture or silence diagnostics via the
+# standard logging tree ("repro" and children) instead of scraping stderr
+logger = logging.getLogger("repro.parallel")
 
 
 def resolve_workers(workers: Union[int, str, None]) -> int:
@@ -91,6 +95,7 @@ def parallel_map(
     except (OSError, PermissionError, BrokenProcessPool) as exc:
         # no subprocess support here (sandbox), or the workers were killed
         # (seccomp/cgroup/OOM): tasks are pure simulations, rerun serially
-        print(f"[parallel] process pool unavailable ({exc}); running serially",
-              file=sys.stderr)
+        logger.warning(
+            "process pool unavailable (%s); running serially", exc
+        )
         return [fn(*t) for t in tasks]

@@ -134,6 +134,11 @@ class ComputeNode:
         self.busy_until = 0.0
         self.completed: List[Job] = []
         self.dropped: List[Job] = []
+        # telemetry (repro.telemetry): drivers wire an *active* recorder
+        # here (never a NullRecorder — they normalize via telemetry.active),
+        # so instrumentation costs one None-check when tracing is off
+        self.recorder = None
+        self.telemetry_name = "node"
 
     def __len__(self) -> int:
         return len(self._heap)
@@ -168,6 +173,11 @@ class ComputeNode:
             svc = self.service_time(job)
             self._svc_cache[id(job)] = svc
             self._queued_work += svc
+        if self.recorder is not None:
+            self.recorder.job_event(
+                "queue_enter", job.uid, job.t_compute_arrival,
+                node=self.telemetry_name,
+            )
 
     def _drop_horizon(self, job: Job) -> float:
         if self.comp_budget is not None:
@@ -183,6 +193,7 @@ class ComputeNode:
         in small steps (the simulator's slot loop) so that jobs arriving
         while the server is busy are present for the next dispatch.
         """
+        rec = self.recorder
         while self._heap and self.busy_until <= now:
             _, _, job = heapq.heappop(self._heap)
             start = max(self.busy_until, job.t_compute_arrival)
@@ -194,7 +205,14 @@ class ComputeNode:
             if self.drop_infeasible and start + svc > self._drop_horizon(job):
                 job.dropped = True
                 self.dropped.append(job)
+                if rec is not None:
+                    rec.job_event("drop", job.uid, start, stage="queue")
                 continue
             job.t_complete = start + svc
             self.busy_until = job.t_complete
             self.completed.append(job)
+            if rec is not None:
+                # whole-job node: the entire inference pass books as one
+                # dispatch (the recorder attributes `svc` to `decode`)
+                rec.job_event("dispatch", job.uid, start, svc=svc)
+                rec.job_event("complete", job.uid, job.t_complete)

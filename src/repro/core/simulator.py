@@ -37,6 +37,7 @@ from typing import Callable, Dict, Iterator, List, Literal, Optional
 import numpy as np
 
 from ..control.arrivals import ArrivalProcess, BoundArrivals, bind_arrivals
+from ..telemetry.recorder import active as _active_recorder
 from .channel import ChannelConfig, UplinkChannel
 from .latency_model import LatencyModel
 from .scheduler import ComputeNode, ComputeNodeProtocol, Job
@@ -121,6 +122,9 @@ class SimResult:
     # transient satisfaction: one dict per scoring window (t0/t1/n/
     # satisfaction/drop_rate), present only when window_s was requested
     windows: Optional[List[dict]] = None
+    # columnar trace (repro.telemetry EventRecorder.to_telemetry), attached
+    # only when the run was traced; None on every untraced run
+    telemetry: Optional[dict] = None
 
     def row(self) -> str:
         s = (
@@ -191,8 +195,12 @@ class SlotEngine:
         chunk_slots: int = 4096,
         arrivals: Optional[BoundArrivals] = None,
         gate: Optional[Callable[[Job, float], bool]] = None,
+        recorder=None,
     ):
         self.sim = sim
+        # lifecycle-event recorder (repro.telemetry); normalized so the
+        # disabled default costs one None-check at each event site
+        self.recorder = _active_recorder(recorder)
         self.rng = rng
         self.packet_priority = packet_priority
         self.wireline = wireline
@@ -408,11 +416,16 @@ class SlotEngine:
                 sim.n_output, sim.b_total, bits=self.bits_per_job,
                 cell=self.cell)
         self.jobs.append(j)
+        rec = self.recorder
+        if rec is not None:
+            rec.job_event("generated", j.uid, now, cell=self.cell, ue=ue)
         if self.gate is not None and not self.gate(j, now):
             # admission control rejected the job at generation: it never
             # touches the uplink but still counts against satisfaction
             j.dropped = True
             j.admitted = False
+            if rec is not None:
+                rec.job_event("rejected", j.uid, now)
             return
         self._in_flight[ue].append([j, j.bits])
         self._n_in_flight += 1
@@ -439,6 +452,8 @@ class SlotEngine:
         self._in_flight[ue].append([job, remaining_bits])
         self._n_in_flight += 1
         self.channel.add_job_bits(ue, remaining_bits, now)
+        if self.recorder is not None:
+            self.recorder.job_event("rehomed", job.uid, now, cell=self.cell)
 
     def urgent_ues(self, now: float, slack_s: float) -> List[int]:
         """UEs whose head in-flight job is within `slack_s` of its
@@ -478,6 +493,13 @@ class SlotEngine:
                 self._n_in_flight -= 1
                 j = entry[0]
                 j.t_compute_arrival = t_slot_end + self.wireline(j, t_slot_end)
+                if self.recorder is not None:
+                    # route is set by wireline() (the router owns the job
+                    # here), so the event carries the routing decision
+                    self.recorder.job_event(
+                        "uplink_done", j.uid, t_slot_end,
+                        route=j.route, t_arrival=j.t_compute_arrival,
+                    )
                 self._wire_queue.append(j)
                 if j.t_compute_arrival < self._wire_next:
                     self._wire_next = j.t_compute_arrival
@@ -618,6 +640,7 @@ def simulate(
     node_factory: Optional[Callable[[], "ComputeNodeProtocol"]] = None,
     fast: bool = True,
     controller: "Optional[ControllerLike]" = None,
+    recorder=None,
 ) -> SimResult:
     """Run one slot-stepped simulation and score Def.-1 satisfaction.
 
@@ -634,6 +657,12 @@ def simulate(
     have no routing to retarget). The idle-slot fast-forward is clamped at
     controller epochs so the loop observes on schedule even in idle spans.
 
+    `recorder` (a `repro.telemetry` TraceRecorder) captures per-job
+    lifecycle events, stage-latency breakdowns, and sampled probe series;
+    an `EventRecorder`'s columnar export is attached as
+    ``result.telemetry``. The default (None / NullRecorder) is free: traced
+    and untraced runs are bit-identical apart from the attachment.
+
     ``fast=False`` selects the reference draw-per-slot engine (identical
     fixed-seed results, ~4x slower; kept for equivalence testing).
     """
@@ -643,6 +672,7 @@ def simulate(
         from ..control import validate_controller
 
         validate_controller(controller)  # unknown presets fail before setup
+    rec = _active_recorder(recorder)
     rng = np.random.default_rng(sim.seed)
     if node_factory is not None:
         node = node_factory()
@@ -667,8 +697,15 @@ def simulate(
         deliver=node.submit,
         fast=fast,
         gate=state.gate if state is not None else None,
+        recorder=rec,
     )
     s, n_slots = 0, engine.n_slots
+    sample_stride = next_sample = 0
+    if rec is not None:
+        node.recorder = rec
+        sample_stride = max(
+            1, int(round(getattr(rec, "sample_every_s", 0.01) / engine.slot))
+        )
     if ctl is not None:
         epoch_slots = max(1, int(round(ctl.epoch_s / engine.slot)))
         next_epoch = epoch_slots
@@ -689,7 +726,7 @@ def simulate(
         if ctl is not None and s >= next_epoch:
             control_epoch(
                 ctl, state, s * engine.slot, sim.b_total, [engine],
-                [("node", node, 0)], svc_s,
+                [("node", node, 0)], svc_s, recorder=rec,
             )
             next_epoch += epoch_slots
         if engine.can_skip():
@@ -704,9 +741,20 @@ def simulate(
                 continue
         t_slot_end = engine.step(s)
         node.run_until(t_slot_end)
+        if rec is not None and s >= next_sample:
+            rec.sample("cell0.uplink", t_slot_end, {
+                "backlog_s": engine.uplink_drain_s(),
+                "in_flight": float(engine._n_in_flight),
+                "active_ues": float(engine.channel.active_ues()),
+            })
+            rec.sample(
+                f"{getattr(node, 'telemetry_name', 'node')}.queue",
+                t_slot_end, {"depth": float(len(node))},
+            )
+            next_sample = s + sample_stride
         s += 1
     node.run_until(float("inf"))
-    return score_jobs(
+    result = score_jobs(
         engine.jobs,
         sim,
         scheme.name,
@@ -714,3 +762,12 @@ def simulate(
         b_comm=scheme.b_comm,
         b_comp=scheme.b_comp,
     )
+    if rec is not None and hasattr(rec, "to_telemetry"):
+        result.telemetry = rec.to_telemetry(meta={
+            "kind": "single_cell",
+            "scheme": scheme.name,
+            "seed": sim.seed,
+            "sim_time": sim.sim_time,
+            "n_ues": sim.n_ues,
+        })
+    return result

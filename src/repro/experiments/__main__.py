@@ -46,6 +46,12 @@ def main(argv=None) -> int:
     p_run.add_argument("--points", choices=("full", "mean", "none"),
                        default="mean",
                        help="per-point detail in --out (default: mean)")
+    p_run.add_argument("--trace", default=None, metavar="PATH",
+                       help="run with telemetry on and export a Chrome "
+                            "trace (open at https://ui.perfetto.dev) of one "
+                            "point: the traced arm's highest rate, seed 0")
+    p_run.add_argument("--trace-arm", default=None, metavar="NAME",
+                       help="arm to export with --trace (default: first)")
 
     p_val = sub.add_parser(
         "validate-bench",
@@ -70,12 +76,28 @@ def main(argv=None) -> int:
     if args.cmd == "run":
         name = f"{args.name}_quick" if args.quick else args.name
         spec = get_experiment(name)
-        result = run(spec, workers=args.workers)
+        result = run(spec, workers=args.workers, trace=args.trace is not None)
         print(result.summary())
         if args.out:
             with open(args.out, "w") as f:
                 f.write(result.to_json(points=args.points))
             print(f"wrote {args.out}")
+        if args.trace:
+            from ..telemetry import write_chrome_trace
+
+            arm = (result.arm(args.trace_arm) if args.trace_arm
+                   else result.arms[0])
+            point = max(arm.points, key=lambda p: p.rate)
+            tel = point.seeds[0].result.telemetry
+            if tel is None:  # defensive: trace=True attaches it everywhere
+                print("[trace] no telemetry captured; nothing to export",
+                      file=sys.stderr)
+                return 1
+            write_chrome_trace(tel, args.trace)
+            print(f"wrote {args.trace} "
+                  f"(arm={arm.name}, rate={point.rate:g}, seed 0; "
+                  f"{tel['counts']['jobs']} jobs, "
+                  f"{tel['counts']['events']} events)")
         return 0
 
     if args.cmd == "validate-bench":

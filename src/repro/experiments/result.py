@@ -37,6 +37,9 @@ class PointRun:
 
     result: SimResult
     extras: Dict[str, object] = dataclasses.field(default_factory=dict)
+    # wall-clock of this one simulation (seconds); lets sweep-time
+    # regressions be attributed to a specific (arm, rate, seed) point
+    duration_s: float = 0.0
 
 
 @dataclasses.dataclass
@@ -65,6 +68,10 @@ class ArmResult:
     name: str
     curve: CapacityCurve
     points: List[PointResult]
+    # summed simulation wall-clock across this arm's grid points (seconds);
+    # under a process pool this is attributable compute time, so the arm
+    # shares can exceed the experiment's elapsed wall_clock_s
+    wall_clock_s: float = 0.0
 
 
 @dataclasses.dataclass
@@ -96,7 +103,8 @@ class ExperimentResult:
             if points == "full":
                 d["seeds"] = [
                     {"result": dataclasses.asdict(s.result),
-                     "extras": dict(s.extras)}
+                     "extras": dict(s.extras),
+                     "duration_s": s.duration_s}
                     for s in p.seeds
                 ]
             return d
@@ -110,6 +118,7 @@ class ExperimentResult:
                 {
                     "name": a.name,
                     "curve": dataclasses.asdict(a.curve),
+                    "wall_clock_s": a.wall_clock_s,
                     "points": (
                         [] if points == "none"
                         else [enc_point(p) for p in a.points]
@@ -139,7 +148,8 @@ class ExperimentResult:
                     mean=dec_sim(pd["mean"]),
                     seeds=[
                         PointRun(result=dec_sim(sd["result"]),
-                                 extras=dict(sd.get("extras", {})))
+                                 extras=dict(sd.get("extras", {})),
+                                 duration_s=sd.get("duration_s", 0.0))
                         for sd in pd.get("seeds", [])
                     ],
                 )
@@ -150,6 +160,8 @@ class ExperimentResult:
                     name=ad["name"],
                     curve=CapacityCurve(**ad["curve"]),
                     points=points,
+                    # absent in baselines written before per-arm timing
+                    wall_clock_s=ad.get("wall_clock_s", 0.0),
                 )
             )
         return cls(
@@ -175,5 +187,12 @@ class ExperimentResult:
                 f"sat@{c.rates[0]:g}={c.satisfaction[0]:.3f}"
                 + (f"  sat@{c.rates[-1]:g}={c.satisfaction[-1]:.3f}"
                    if len(c.rates) > 1 else "")
+            )
+        slowest = max(self.arms, key=lambda a: a.wall_clock_s, default=None)
+        if slowest is not None and slowest.wall_clock_s > 0.0:
+            total = sum(a.wall_clock_s for a in self.arms)
+            lines.append(
+                f"  slowest arm: {slowest.name} "
+                f"({slowest.wall_clock_s:.1f}s of {total:.1f}s sim time)"
             )
         return "\n".join(lines)

@@ -53,7 +53,9 @@ from .spec import (
 __all__ = ["run", "run_point"]
 
 
-def _single_cell_point(arm: ResolvedArm, lam: float, seed_idx: int) -> PointRun:
+def _single_cell_point(
+    arm: ResolvedArm, lam: float, seed_idx: int, recorder=None
+) -> PointRun:
     sc = resolve_scenario(arm.workload.scenario)
     scheme = resolve_scheme(arm.system.scheme)
     hw = resolve_gpu(arm.system.gpu)
@@ -97,7 +99,7 @@ def _single_cell_point(arm: ResolvedArm, lam: float, seed_idx: int) -> PointRun:
             return holder["node"]
 
         res = simulate(scheme, cfg, node_factory=factory, fast=sw.fast,
-                       controller=arm.control.controller)
+                       controller=arm.control.controller, recorder=recorder)
         node = holder["node"]
         extras = {
             "avg_batch": round(node.stats.avg_batch(), 2),
@@ -112,12 +114,14 @@ def _single_cell_point(arm: ResolvedArm, lam: float, seed_idx: int) -> PointRun:
         svc = ModelService(hw, profile,
                            fidelity=arm.system.fidelity or "paper")
         res = simulate(scheme, cfg, svc, fast=sw.fast,
-                       controller=arm.control.controller)
+                       controller=arm.control.controller, recorder=recorder)
         extras = {}
     return PointRun(result=res, extras=extras)
 
 
-def _multi_cell_point(arm: ResolvedArm, lam: float, seed_idx: int) -> PointRun:
+def _multi_cell_point(
+    arm: ResolvedArm, lam: float, seed_idx: int, recorder=None
+) -> PointRun:
     from ..network.simulator import config_for_load, simulate_network
 
     sw = arm.sweep
@@ -136,7 +140,8 @@ def _multi_cell_point(arm: ResolvedArm, lam: float, seed_idx: int) -> PointRun:
         controller=arm.control.controller,
         window_s=sw.window_s,
     )
-    net = simulate_network(cfg, arm.system.policy, fast=sw.fast)
+    net = simulate_network(cfg, arm.system.policy, fast=sw.fast,
+                           recorder=recorder)
     extras = {
         "route_share": dict(net.route_share),
         "n_rejected": net.n_rejected,
@@ -150,19 +155,37 @@ def _multi_cell_point(arm: ResolvedArm, lam: float, seed_idx: int) -> PointRun:
     return PointRun(result=net.total, extras=extras)
 
 
-def run_point(arm: ResolvedArm, lam: float, seed_idx: int) -> PointRun:
-    """One (arm, rate, seed) grid point (module-level: picklable)."""
+def run_point(
+    arm: ResolvedArm, lam: float, seed_idx: int, trace: bool = False
+) -> PointRun:
+    """One (arm, rate, seed) grid point (module-level: picklable).
+
+    ``trace=True`` runs the point under a fresh
+    `repro.telemetry.EventRecorder`; the columnar telemetry dict rides back
+    on ``PointRun.result.telemetry`` (plain data — it crosses the process
+    pool as a pickle like every other field). Results are otherwise
+    bit-identical to an untraced run."""
+    recorder = None
+    if trace:
+        from ..telemetry import EventRecorder
+
+        recorder = EventRecorder()
+    t0 = time.perf_counter()
     if arm.system.kind == "multi_cell":
-        return _multi_cell_point(arm, lam, seed_idx)
-    if arm.workload.mobility is not None:
-        raise ValueError("mobility requires a multi_cell system")
-    return _single_cell_point(arm, lam, seed_idx)
+        pr = _multi_cell_point(arm, lam, seed_idx, recorder=recorder)
+    else:
+        if arm.workload.mobility is not None:
+            raise ValueError("mobility requires a multi_cell system")
+        pr = _single_cell_point(arm, lam, seed_idx, recorder=recorder)
+    pr.duration_s = round(time.perf_counter() - t0, 4)
+    return pr
 
 
 def run(
     spec: ExperimentSpec,
     workers: Union[int, str, None] = None,
     chunk: Union[int, str, None] = None,
+    trace: bool = False,
 ) -> ExperimentResult:
     """Run every arm of `spec` and return the unified result.
 
@@ -170,13 +193,20 @@ def run(
     (execution knobs, not part of the experiment's identity); results are
     identical at any setting. The whole experiment — all arms — flattens
     through a single pool so small arms don't serialize behind big ones.
+
+    `trace` runs every point under a `repro.telemetry.EventRecorder` and
+    attaches the columnar telemetry to each seed `SimResult` — a runtime
+    knob, deliberately *not* a spec field (tracing never changes what the
+    experiment measures, and the spec schema stays at its pinned version).
+    Intended for quick/reduced grids; a full sweep holds every point's
+    event stream in memory at once.
     """
     spec.validate()
     arms = spec.resolve_arms()
     if workers is None:
         workers = spec.sweep.workers
     tasks = [
-        (arm, float(lam), s)
+        (arm, float(lam), s, trace)
         for arm in arms
         for lam in arm.sweep.rates
         for s in range(arm.sweep.n_seeds)
@@ -205,7 +235,14 @@ def run(
             saturated=all(s >= alpha for s in sats),
             alpha=alpha,
         )
-        out.append(ArmResult(name=arm.name, curve=curve, points=points))
+        out.append(ArmResult(
+            name=arm.name,
+            curve=curve,
+            points=points,
+            wall_clock_s=round(
+                sum(s.duration_s for p in points for s in p.seeds), 2
+            ),
+        ))
     assert cursor == len(flat)
     return ExperimentResult(
         experiment=spec.name,

@@ -26,6 +26,7 @@ Usage:
 import argparse
 import dataclasses
 import json
+import logging
 import time
 import traceback
 
@@ -38,6 +39,11 @@ from .hlo_analysis import analyze_hlo
 from .mesh import make_production_mesh
 from .roofline import derive_roofline
 from .specs import SHAPES, build_case, skip_reason
+
+# package logger ("repro" tree): importable callers (tests, sweep drivers)
+# capture/filter case diagnostics; the CLI entrypoint wires a handler that
+# reproduces the historical "[dryrun] ..." console lines
+logger = logging.getLogger("repro.launch.dryrun")
 
 ASSIGNED = [
     "qwen1.5-110b", "qwen2-vl-72b", "mixtral-8x22b", "seamless-m4t-large-v2",
@@ -58,7 +64,7 @@ def run_case(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
     if reason:
         rec = {"case": label, "status": "skipped", "reason": reason}
         _write(out_dir, label, rec)
-        print(f"[dryrun] {label}: SKIP ({reason.split(';')[0]})")
+        logger.info("%s: SKIP (%s)", label, reason.split(";")[0])
         return rec
 
     try:
@@ -115,11 +121,12 @@ def run_case(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
             "roofline": roof.as_dict(),
         }
         dom = roof.dominant
-        print(
-            f"[dryrun] {label}: OK compile={t_compile:.0f}s "
-            f"mem={rec['memory']['peak_est_gb']:.1f}GB "
-            f"terms(c/m/x)={roof.compute_s:.3f}/{roof.memory_s:.3f}/"
-            f"{roof.collective_s:.3f}s dom={dom} useful={roof.useful_ratio:.2f}"
+        logger.info(
+            "%s: OK compile=%.0fs mem=%.1fGB terms(c/m/x)=%.3f/%.3f/%.3fs "
+            "dom=%s useful=%.2f",
+            label, t_compile, rec["memory"]["peak_est_gb"],
+            roof.compute_s, roof.memory_s, roof.collective_s,
+            dom, roof.useful_ratio,
         )
     except Exception as e:  # a failure here is a bug in the sharding config
         rec = {
@@ -128,7 +135,7 @@ def run_case(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
             "error": f"{type(e).__name__}: {e}",
             "traceback": traceback.format_exc()[-4000:],
         }
-        print(f"[dryrun] {label}: ERROR {type(e).__name__}: {str(e)[:200]}")
+        logger.error("%s: ERROR %s: %s", label, type(e).__name__, str(e)[:200])
     _write(out_dir, label, rec)
     return rec
 
@@ -140,6 +147,9 @@ def _write(out_dir: str, label: str, rec: dict) -> None:
 
 
 def main() -> None:
+    # CLI entrypoint: surface the case log on the console exactly as the
+    # historical prints did (no-op if the caller configured logging already)
+    logging.basicConfig(level=logging.INFO, format="[dryrun] %(message)s")
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
     ap.add_argument("--shape", default=None, choices=list(SHAPES))
@@ -205,7 +215,7 @@ def main() -> None:
                 n_ok += st == "ok"
                 n_err += st == "error"
                 n_skip += st == "skipped"
-    print(f"[dryrun] done: {n_ok} ok, {n_skip} skipped, {n_err} errors")
+    logger.info("done: %d ok, %d skipped, %d errors", n_ok, n_skip, n_err)
     if n_err:
         raise SystemExit(1)
 

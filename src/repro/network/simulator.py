@@ -44,6 +44,7 @@ from ..control.arrivals import ArrivalProcess
 from ..core.latency_model import LLAMA2_7B, ModelProfile
 from ..core.scheduler import Job
 from ..core.simulator import SimConfig, SimResult, SlotEngine, score_jobs
+from ..telemetry.recorder import active as _active_recorder
 from .routing import RoutingPolicy, get_policy
 from .scenarios import SCENARIOS, Scenario
 from .topology import Topology, TopologyConfig
@@ -142,19 +143,30 @@ def simulate_network(
     cfg: NetSimConfig,
     policy: Union[str, RoutingPolicy],
     fast: bool = True,
+    recorder=None,
     _debug_engines: Optional[list] = None,
 ) -> NetResult:
     """Run one multi-cell simulation under `policy` and score Def. 1.
 
     ``fast=False`` selects the reference draw-per-slot engines (identical
-    fixed-seed results; kept for equivalence testing). `_debug_engines`,
+    fixed-seed results; kept for equivalence testing). `recorder` (a
+    `repro.telemetry` TraceRecorder) captures lifecycle events and probe
+    series across every cell and fleet node; an `EventRecorder`'s columnar
+    export attaches as ``result.total.telemetry``. The default
+    (None / NullRecorder) is free — traced and untraced runs are
+    bit-identical apart from the attachment. `_debug_engines`,
     when a list, receives the per-cell SlotEngines after the run (tests
     assert job-conservation invariants on the raw timelines)."""
+    rec = _active_recorder(recorder)
     sc = cfg.scenario
     topo = Topology(
         cfg.topology, model=cfg.model,
         node_kind=cfg.node_kind, max_batch=cfg.max_batch,
     )
+    if rec is not None:
+        for fname, fn in topo.nodes.items():
+            fn.node.recorder = rec
+            fn.node.telemetry_name = fname
     pol = get_policy(policy).bind(topo)
     uid = itertools.count()  # fleet-wide unique job ids
     sites = cfg.topology.sites
@@ -236,6 +248,7 @@ def simulate_network(
                     presence=mob.presence_for_cell(i) if mob else None,
                 ),
                 gate=state.gate if state is not None else None,
+                recorder=rec,
             )
         )
     assert all(e.n_slots == n_slots for e in engines)
@@ -263,6 +276,11 @@ def simulate_network(
             for fn in nodes
         }
 
+    sample_stride = next_sample = 0
+    if rec is not None:
+        sample_stride = max(
+            1, int(round(getattr(rec, "sample_every_s", 0.01) / slot))
+        )
     s = 0
     while s < n_slots:
         while events and events[0][0] <= s:
@@ -300,6 +318,7 @@ def simulate_network(
             control_epoch(
                 ctl, state, s * slot, sc.b_total, engines,
                 [(fn.name, fn.node, fn.in_transit) for fn in nodes], svc_s,
+                recorder=rec,
             )
             next_epoch += epoch_slots
         if all(e.can_skip() for e in engines):
@@ -321,6 +340,19 @@ def simulate_network(
             t_slot_end = e.step(s)
         for fn in nodes:
             fn.node.run_until(t_slot_end)
+        if rec is not None and s >= next_sample:
+            for i, e in enumerate(engines):
+                rec.sample(f"cell{i}.uplink", t_slot_end, {
+                    "backlog_s": e.uplink_drain_s(),
+                    "in_flight": float(e._n_in_flight),
+                    "active_ues": float(e.channel.active_ues()),
+                })
+            for fn in nodes:
+                rec.sample(f"{fn.name}.queue", t_slot_end, {
+                    "depth": float(len(fn.node)),
+                    "in_transit": float(fn.in_transit),
+                })
+            next_sample = s + sample_stride
         s += 1
     for fn in nodes:
         fn.node.run_until(float("inf"))
@@ -340,6 +372,17 @@ def simulate_network(
     counts = collections.Counter(j.route for j in all_jobs if j.route)
     n_routed = max(sum(counts.values()), 1)
     share = {k: v / n_routed for k, v in counts.items()}
+    if rec is not None and hasattr(rec, "to_telemetry"):
+        total.telemetry = rec.to_telemetry(meta={
+            "kind": "network",
+            "policy": pol.name,
+            "scenario": sc.name,
+            "seed": cfg.seed,
+            "sim_time": cfg.sim_time,
+            "n_cells": len(sites),
+            "nodes": [fn.name for fn in nodes],
+            "controller": ctl.name if ctl is not None else None,
+        })
     return NetResult(
         policy=pol.name,
         total=total,

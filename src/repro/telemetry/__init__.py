@@ -1,0 +1,32 @@
+"""Observability layer: trace recorders, probe series, Chrome-trace export.
+
+Pass an `EventRecorder` as ``recorder=`` to `repro.core.simulate` or
+`repro.network.simulate_network` (or ``trace=True`` to
+`repro.experiments.run`, or ``--trace out.json`` on the CLI) to capture
+per-job lifecycle events, stage-latency breakdowns, sampled probe series,
+and controller epoch records. The default `NullRecorder` is provably free:
+fixed-seed results stay bit-identical to untraced runs.
+"""
+
+from .recorder import (
+    NULL_RECORDER,
+    STAGE_FIELDS,
+    TELEMETRY_SCHEMA,
+    EventRecorder,
+    NullRecorder,
+    TraceRecorder,
+    active,
+)
+from .chrome import chrome_trace, write_chrome_trace
+
+__all__ = [
+    "STAGE_FIELDS",
+    "TELEMETRY_SCHEMA",
+    "TraceRecorder",
+    "NullRecorder",
+    "NULL_RECORDER",
+    "EventRecorder",
+    "active",
+    "chrome_trace",
+    "write_chrome_trace",
+]

@@ -1,0 +1,416 @@
+"""Telemetry layer: provably-free when off, deterministic when on.
+
+Three contracts pin the PR 6 observability layer:
+
+  1. **NullRecorder/None is free**: every instrumented engine produces
+     *bit-identical* results with `recorder=None` (the default),
+     `NULL_RECORDER`, and a live `EventRecorder` — the recorder observes,
+     it never perturbs (no RNG draws, no float ops on sim state). Checked
+     against hard-coded pre-PR values across {classic, batched} x
+     {single-cell, network} plus the controlled flash-crowd run.
+  2. **Traces are deterministic**: a fixed seed yields an identical event
+     stream on repeated runs, and the fast engine's stream equals the
+     reference engine's (the trace is part of the trajectory contract).
+  3. **Stage attribution telescopes**: per-job
+     radio+transport+queue+prefill+decode+stall == end-to-end latency to
+     float round-off (stall is the residual, so this is exact by
+     construction — the test guards against a stage being double-booked
+     or skipped).
+
+Plus structural checks on the Chrome-trace exporter, the per-arm
+wall-clock satellite, the `--trace` CLI path, and the `repro.parallel`
+logging fallback.
+"""
+
+import json
+import logging
+import math
+
+import pytest
+
+from repro.batching import BatchedComputeNode
+from repro.core.latency_model import GH200_NVL2, LLAMA2_7B, LatencyModel, ModelService
+from repro.core.simulator import SCHEMES, SimConfig, simulate
+from repro.network import SCENARIOS, simulate_network, three_cell_hetero
+from repro.network.simulator import config_for_load
+from repro.telemetry import (
+    NULL_RECORDER,
+    STAGE_FIELDS,
+    EventRecorder,
+    NullRecorder,
+    active,
+    chrome_trace,
+    write_chrome_trace,
+)
+
+# --------------------------------------------------------------------------
+# the five pinned pre-PR configurations (values produced at the seed of this
+# PR, before any instrumentation landed — the NullRecorder contract is that
+# they never move again)
+# --------------------------------------------------------------------------
+
+SVC = ModelService(GH200_NVL2.scaled(2), LLAMA2_7B, "paper")
+
+
+def _run_classic_single(recorder=None):
+    cfg = SimConfig(n_ues=60, sim_time=6.0, seed=3)
+    return simulate(SCHEMES["icc"], cfg, SVC, recorder=recorder)
+
+
+def _run_batched_single(recorder=None):
+    cfg = SimConfig(n_ues=60, sim_time=6.0, seed=3)
+    lm = LatencyModel(GH200_NVL2.scaled(2), LLAMA2_7B, fidelity="extended")
+
+    def factory():
+        return BatchedComputeNode(lm, max_batch=8, policy="priority",
+                                  drop_infeasible=True)
+
+    return simulate(SCHEMES["icc"], cfg, node_factory=factory,
+                    recorder=recorder)
+
+
+def _net_cfg(**kw):
+    return config_for_load(
+        three_cell_hetero(), SCENARIOS["ar_translation"], 70.0,
+        sim_time=6.0, seed=1, **kw,
+    )
+
+
+def _run_classic_net(recorder=None):
+    return simulate_network(_net_cfg(), "slack_aware", recorder=recorder)
+
+
+def _run_batched_net(recorder=None):
+    return simulate_network(_net_cfg(node_kind="batched", max_batch=8),
+                            "slack_aware", recorder=recorder)
+
+
+def _run_flash_net(recorder=None):
+    cfg = config_for_load(
+        three_cell_hetero(), SCENARIOS["flash_crowd"], 60.0,
+        sim_time=8.0, seed=0, controller="slack_aware_joint", window_s=1.0,
+    )
+    return simulate_network(cfg, "controlled", recorder=recorder)
+
+
+PINNED_CLASSIC_SINGLE = (
+    246, 0.991869918699187, 0.030920960187354695,
+    0.006493852459016407, 0.02442710772833829,
+)
+PINNED_BATCHED_SINGLE = (246, 1.0, 0.018130870187887484, 0.008117456348564612)
+PINNED_CLASSIC_NET = (
+    256, 1.0, 0.03952795738951169,
+    {"mec": 0.37659033078880405, "ran:cell0": 0.2748091603053435,
+     "ran:cell1": 0.3486005089058524},
+)
+PINNED_BATCHED_NET = (256, 1.0, 0.03406602129595544, 0.014777134356785482)
+PINNED_FLASH_NET = (
+    1673, 0.20143454871488345, 0.07090591879423414, 1262, 159,
+)
+
+
+def assert_simresults_equal(a, b):
+    """Exact SimResult equality, NaN-aware, ignoring the telemetry
+    attachment (the one field tracing is *allowed* to change)."""
+    import dataclasses
+
+    for f in dataclasses.fields(a):
+        if f.name == "telemetry":
+            continue
+        va, vb = getattr(a, f.name), getattr(b, f.name)
+        if isinstance(va, float) and math.isnan(va):
+            assert isinstance(vb, float) and math.isnan(vb), f.name
+        else:
+            assert va == vb, (f.name, va, vb)
+
+
+# shared traced runs (the expensive ones) ----------------------------------
+
+@pytest.fixture(scope="module")
+def traced_flash():
+    rec = EventRecorder()
+    net = _run_flash_net(recorder=rec)
+    return net, rec
+
+
+@pytest.fixture(scope="module")
+def traced_batched_single():
+    rec = EventRecorder()
+    res = _run_batched_single(recorder=rec)
+    return res, rec
+
+
+class TestNullRecorderIsFree:
+    """recorder=None / NullRecorder / EventRecorder: identical results,
+    pinned to the pre-instrumentation values."""
+
+    def test_classic_single_pinned(self):
+        base = _run_classic_single()
+        assert (base.n_jobs, base.satisfaction, base.avg_e2e,
+                base.avg_comm, base.avg_comp) == PINNED_CLASSIC_SINGLE
+        assert base.telemetry is None
+        null = _run_classic_single(recorder=NULL_RECORDER)
+        assert_simresults_equal(base, null)
+        assert null.telemetry is None
+        traced = _run_classic_single(recorder=EventRecorder())
+        assert_simresults_equal(base, traced)
+        assert traced.telemetry is not None
+
+    def test_batched_single_pinned(self, traced_batched_single):
+        base = _run_batched_single()
+        assert (base.n_jobs, base.satisfaction, base.avg_e2e,
+                base.avg_ttft) == PINNED_BATCHED_SINGLE
+        null = _run_batched_single(recorder=NullRecorder())
+        assert_simresults_equal(base, null)
+        traced, _rec = traced_batched_single
+        assert_simresults_equal(base, traced)
+
+    def test_classic_net_pinned(self):
+        base = _run_classic_net()
+        assert (base.total.n_jobs, base.total.satisfaction,
+                base.total.avg_e2e, base.route_share) == PINNED_CLASSIC_NET
+        assert base.total.telemetry is None
+        traced = _run_classic_net(recorder=EventRecorder())
+        assert_simresults_equal(base.total, traced.total)
+        assert base.route_share == traced.route_share
+        assert traced.total.telemetry is not None
+
+    def test_batched_net_pinned(self):
+        base = _run_batched_net()
+        assert (base.total.n_jobs, base.total.satisfaction,
+                base.total.avg_e2e, base.total.avg_ttft) == PINNED_BATCHED_NET
+        traced = _run_batched_net(recorder=EventRecorder())
+        assert_simresults_equal(base.total, traced.total)
+
+    def test_flash_crowd_controlled_pinned(self, traced_flash):
+        base = _run_flash_net()
+        assert (base.total.n_jobs, base.total.satisfaction,
+                base.total.avg_e2e, base.n_rejected,
+                base.n_epochs) == PINNED_FLASH_NET
+        traced, rec = traced_flash
+        assert_simresults_equal(base.total, traced.total)
+        assert traced.n_epochs == base.n_epochs
+        # the recorder saw every controller epoch
+        assert len(rec.epochs) == base.n_epochs
+
+    def test_active_normalizes(self):
+        assert active(None) is None
+        assert active(NULL_RECORDER) is None
+        assert active(NullRecorder()) is None
+        rec = EventRecorder()
+        assert active(rec) is rec
+
+
+class TestTraceDeterminism:
+    def test_same_seed_same_event_stream(self):
+        rec_a, rec_b = EventRecorder(), EventRecorder()
+        _run_classic_single(recorder=rec_a)
+        _run_classic_single(recorder=rec_b)
+        assert rec_a.events == rec_b.events
+        assert rec_a.to_telemetry() == rec_b.to_telemetry()
+
+    def test_fast_matches_reference_engine(self):
+        cfg = SimConfig(n_ues=25, sim_time=5.0, seed=11)
+        rec_fast, rec_ref = EventRecorder(), EventRecorder()
+        simulate(SCHEMES["icc"], cfg, SVC, fast=True, recorder=rec_fast)
+        simulate(SCHEMES["icc"], cfg, SVC, fast=False, recorder=rec_ref)
+        assert rec_fast.events == rec_ref.events
+
+    def test_network_same_seed_same_stream(self):
+        rec_a, rec_b = EventRecorder(), EventRecorder()
+        _run_classic_net(recorder=rec_a)
+        _run_classic_net(recorder=rec_b)
+        assert rec_a.events == rec_b.events
+
+
+class TestStageAttribution:
+    def _check_telescoping(self, tel):
+        jobs, stages = tel["jobs"], tel["stages"]
+        n = len(jobs["uid"])
+        assert n == tel["counts"]["jobs"]
+        for col in jobs.values():
+            assert len(col) == n
+        for f in STAGE_FIELDS:
+            assert len(stages[f]) == n
+        checked = 0
+        for i in range(n):
+            t_gen, t_done = jobs["t_gen"][i], jobs["t_complete"][i]
+            if t_done is None:
+                for f in STAGE_FIELDS:
+                    assert stages[f][i] is None
+                continue
+            total = sum(stages[f][i] for f in STAGE_FIELDS)
+            assert abs(total - (t_done - t_gen)) <= 1e-9, jobs["uid"][i]
+            for f in STAGE_FIELDS:
+                assert stages[f][i] >= -1e-12, (f, jobs["uid"][i])
+            checked += 1
+        assert checked > 0
+
+    def test_flash_crowd_stage_sums(self, traced_flash):
+        net, _rec = traced_flash
+        tel = net.total.telemetry
+        assert tel is not None and tel["schema"] == 1
+        self._check_telescoping(tel)
+        assert tel["meta"]["kind"] == "network"
+        assert tel["counts"]["epochs"] == net.n_epochs
+
+    def test_batched_single_stage_sums(self, traced_batched_single):
+        res, _rec = traced_batched_single
+        tel = res.telemetry
+        self._check_telescoping(tel)
+        # batched nodes attribute real prefill/decode time
+        assert any(v and v > 0 for v in tel["stages"]["prefill"])
+        assert any(v and v > 0 for v in tel["stages"]["decode"])
+
+    def test_classic_dispatch_has_zero_stall(self):
+        rec = EventRecorder()
+        _run_classic_single(recorder=rec)
+        tel = rec.to_telemetry()
+        for i, t_done in enumerate(tel["jobs"]["t_complete"]):
+            if t_done is not None:
+                assert tel["stages"]["stall"][i] == pytest.approx(0.0, abs=1e-9)
+
+    def test_series_sampled(self, traced_flash):
+        _net, rec = traced_flash
+        tel = rec.to_telemetry()
+        tracks = set(tel["series"])
+        assert any(t.startswith("cell") and t.endswith(".uplink")
+                   for t in tracks)
+        assert any(t.endswith(".queue") for t in tracks)
+        for track, s in tel["series"].items():
+            ts = s["t"]
+            assert ts == sorted(ts), track
+            # throttle honoured: consecutive samples >= sample_every_s apart
+            for a, b in zip(ts, ts[1:]):
+                assert b - a >= rec.sample_every_s - 1e-12, track
+
+
+class TestChromeTrace:
+    def test_structurally_valid_and_balanced(self, traced_flash, tmp_path):
+        net, _rec = traced_flash
+        ct = chrome_trace(net.total.telemetry)
+        # NaN/Inf never reach the JSON (Perfetto rejects them)
+        blob = json.dumps(ct, allow_nan=False)
+        assert json.loads(blob)["traceEvents"]
+        phases = [e["ph"] for e in ct["traceEvents"]]
+        assert phases.count("b") == phases.count("e") > 0
+        assert "C" in phases and "M" in phases and "i" in phases
+        # async begin/end pairs balance per (cat, id)
+        depth = {}
+        for e in ct["traceEvents"]:
+            if e["ph"] in ("b", "e"):
+                key = (e["cat"], e["id"], e["name"])
+                depth[key] = depth.get(key, 0) + (1 if e["ph"] == "b" else -1)
+                assert depth[key] >= 0, key
+        assert all(v == 0 for v in depth.values())
+
+    def test_write_roundtrip(self, traced_batched_single, tmp_path):
+        res, _rec = traced_batched_single
+        path = tmp_path / "trace.json"
+        write_chrome_trace(res.telemetry, str(path))
+        data = json.loads(path.read_text())
+        assert data["displayTimeUnit"] == "ms"
+        assert data["otherData"]["kind"] == "single_cell"
+
+    def test_schema_guard(self):
+        with pytest.raises(ValueError):
+            chrome_trace({"schema": 99})
+
+
+class TestEventRecorderUnit:
+    def test_unknown_kind_kept_in_events_only(self):
+        rec = EventRecorder()
+        rec.job_event("generated", 1, 0.0, cell=0, ue=0)
+        rec.job_event("weird_custom", 1, 0.5)
+        rec.job_event("complete", 1, 1.0)
+        tel = rec.to_telemetry()
+        assert tel["counts"]["jobs"] == 1
+        assert ("weird_custom", 1) in [(k, u) for _t, k, u in rec.events]
+
+    def test_sample_throttle(self):
+        rec = EventRecorder(sample_every_s=0.5)
+        for i in range(11):
+            rec.sample("x.track", 0.25 * i, {"v": float(i)})
+        ts = rec.to_telemetry()["series"]["x.track"]["t"]
+        assert ts == [0.0, 0.5, 1.0, 1.5, 2.0, 2.5]
+
+    def test_null_recorder_api_is_noop(self):
+        rec = NullRecorder()
+        assert rec.enabled is False
+        rec.job_event("generated", 0, 0.0)
+        rec.sample("t", 0.0, {})
+        rec.epoch(0.0, {})
+
+
+class TestExperimentIntegration:
+    def _tiny_spec(self, name):
+        from repro.experiments import (
+            ExperimentSpec, SweepSpec, SystemSpec, WorkloadSpec,
+        )
+
+        return ExperimentSpec(
+            name=name,
+            workload=WorkloadSpec(scenario="ar_translation"),
+            system=SystemSpec(kind="single_cell", scheme="icc"),
+            sweep=SweepSpec(rates=(40.0,), n_seeds=1, sim_time=2.0,
+                            warmup=0.5, workers=0),
+        )
+
+    def test_wall_clock_and_summary(self):
+        from repro.experiments import ExperimentResult, run
+
+        res = run(self._tiny_spec("tiny_wallclock"), trace=False)
+        arm = res.arms[0]
+        assert arm.wall_clock_s > 0
+        assert all(s.duration_s > 0 for p in arm.points for s in p.seeds)
+        assert "slowest arm: tiny_wallclock" in res.summary()
+        # wall-clock round-trips the serialized schema
+        back = ExperimentResult.from_dict(json.loads(res.to_json(points="full")))
+        assert back.arms[0].wall_clock_s == arm.wall_clock_s
+        assert back.arms[0].points[0].seeds[0].duration_s == \
+            arm.points[0].seeds[0].duration_s
+
+    def test_trace_flag_attaches_telemetry(self):
+        from repro.experiments import run
+
+        res = run(self._tiny_spec("tiny_traced"), trace=True)
+        tel = res.arms[0].points[0].seeds[0].result.telemetry
+        assert tel is not None and tel["schema"] == 1
+        untraced = run(self._tiny_spec("tiny_untraced"), trace=False)
+        assert untraced.arms[0].points[0].seeds[0].result.telemetry is None
+        # tracing never moves the measurement
+        assert_simresults_equal(
+            res.arms[0].points[0].seeds[0].result,
+            untraced.arms[0].points[0].seeds[0].result,
+        )
+
+    def test_cli_trace_export(self, tmp_path):
+        from repro.experiments.__main__ import main
+        from repro.experiments.registry import register_experiment
+
+        register_experiment(self._tiny_spec("tiny_cli_trace"), replace=True)
+        out = tmp_path / "cli_trace.json"
+        rc = main(["run", "tiny_cli_trace", "--trace", str(out)])
+        assert rc == 0
+        data = json.loads(out.read_text())
+        assert data["traceEvents"]
+
+
+class TestLoggingFallback:
+    def test_pool_failure_logs_and_degrades(self, monkeypatch, caplog):
+        import repro.core.parallel as par
+
+        class Exploding:
+            def __init__(self, *a, **kw):
+                raise OSError("no subprocess for you")
+
+        monkeypatch.setattr(par, "ProcessPoolExecutor", Exploding)
+        with caplog.at_level(logging.WARNING, logger="repro.parallel"):
+            out = par.parallel_map(_square, [(1,), (2,), (3,)], workers=2)
+        assert out == [1, 4, 9]
+        assert any("process pool unavailable" in r.message
+                   for r in caplog.records)
+
+
+def _square(x):
+    return x * x
