@@ -15,7 +15,11 @@ absorb runner noise) fails the run. Quick mode also runs the telemetry
 gate: one controlled flash-crowd pass untraced and one under an
 `EventRecorder` — results must be bit-identical, the traced run must stay
 within 2x untraced, and its Chrome trace is written to
-``benchmarks/results/trace_quick.json`` (the CI trace artifact).
+``benchmarks/results/trace_quick.json`` (the CI trace artifact). Finally
+the report gate renders the quick network sweep into
+``benchmarks/results/report_quick.md`` and re-renders every tracked
+``BENCH_*.json`` baseline twice, failing on any render error or
+byte-level nondeterminism.
 
 ``--workers N`` fans the sweep grids out over N processes (default: one
 per CPU; simulation results are identical to the serial path — every grid
@@ -109,6 +113,50 @@ def _telemetry_overhead_check(timings: dict) -> int:
               f"{TRACE_OVERHEAD_FACTOR:.0f}x untraced {t_off:.2f}s")
         return 1
     return 0
+
+
+REPORT_QUICK_OUT = "benchmarks/results/report_quick.md"  # CI artifact
+
+
+def _report_smoke() -> int:
+    """Quick-mode report gate: render the quick network sweep into the
+    REPORT_QUICK_OUT artifact, then render every tracked baseline twice and
+    require byte-identical output — the report generator is a pure function
+    of the file, so any drift here is nondeterminism, not data."""
+    from repro.experiments.validate import BENCH_BASELINES
+    from repro.telemetry.report import generate_report
+
+    rc = 0
+    quick_src = "benchmarks/results/BENCH_network_quick.json"
+    if os.path.exists(quick_src):
+        md = generate_report(quick_src)
+        with open(REPORT_QUICK_OUT, "w") as f:
+            f.write(md)
+        print(f"[report] {quick_src} -> {REPORT_QUICK_OUT} "
+              f"({len(md)} bytes)")
+    else:
+        print(f"[report] FAIL: {quick_src} missing (quick sweep should "
+              "have written it)")
+        rc = 1
+    for path in BENCH_BASELINES:
+        if not os.path.exists(path):
+            print(f"[report] FAIL: tracked baseline {path} missing")
+            rc = 1
+            continue
+        try:
+            a = generate_report(path)
+            b = generate_report(path)
+        except Exception as exc:  # noqa: BLE001 - smoke gate reports all
+            print(f"[report] FAIL: {path} did not render: {exc}")
+            rc = 1
+            continue
+        if a != b:
+            print(f"[report] FAIL: {path} rendered nondeterministically")
+            rc = 1
+        else:
+            print(f"[report] {path}: renders deterministically "
+                  f"({len(a)} bytes)")
+    return rc
 
 
 def main(quick: bool = False, workers: int = -1) -> int:
@@ -260,7 +308,8 @@ def main(quick: bool = False, workers: int = -1) -> int:
             print(f"[validate-bench] {p}")
         if not problems:
             print("[validate-bench] tracked baselines OK")
-        return trc or rc or (1 if problems else 0)
+        rep = _report_smoke()
+        return trc or rc or rep or (1 if problems else 0)
     return 0
 
 

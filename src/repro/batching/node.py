@@ -197,9 +197,11 @@ class BatchedComputeNode:
                 heapq.heappop(self._heap)
                 self._waiting_work = max(self._waiting_work - svc, 0.0)
                 job.dropped = True
+                job.drop_reason = "queue_drop"
                 self.dropped.append(job)
                 if rec is not None:
-                    rec.job_event("drop", job.uid, t, stage="queue")
+                    rec.job_event("drop", job.uid, t, stage="queue",
+                                  reason="queue_drop")
                 continue
             if not self.kv.can_admit(job):
                 if self.kv.job_bytes(job) > self.kv.capacity_bytes:
@@ -207,9 +209,12 @@ class BatchedComputeNode:
                     heapq.heappop(self._heap)
                     self._waiting_work = max(self._waiting_work - svc, 0.0)
                     job.dropped = True
+                    job.drop_reason = "kv_reject"
                     self.dropped.append(job)
                     if rec is not None:
-                        rec.job_event("drop", job.uid, t, stage="kv_unservable")
+                        rec.job_event("drop", job.uid, t,
+                                      stage="kv_unservable",
+                                      reason="kv_reject")
                     continue
                 # Head-of-line blocking by design: admission is strictly in
                 # queue order, the cache is the binding resource.
@@ -233,10 +238,12 @@ class BatchedComputeNode:
             if t >= self._drop_horizon(r.job) and r.generated < r.job.n_output:
                 self.kv.release(r.job)
                 r.job.dropped = True
+                r.job.drop_reason = "deadline_preempt"
                 self.dropped.append(r.job)
                 self.stats.preempted += 1
                 if self.recorder is not None:
-                    self.recorder.job_event("preempt", r.job.uid, t)
+                    self.recorder.job_event("preempt", r.job.uid, t,
+                                            reason="deadline_preempt")
             else:
                 keep.append(r)
         self._running = keep

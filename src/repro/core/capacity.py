@@ -83,6 +83,15 @@ def mean_over_seeds(results: Sequence[SimResult], name: Optional[str] = None) ->
             })
         return out
 
+    def reason_sum():
+        # loss counts sum across seeds (consistent with n_jobs); None
+        # when no seed lost anything
+        merged: dict = {}
+        for r in results:
+            for reason, k in (r.drop_reasons or {}).items():
+                merged[reason] = merged.get(reason, 0) + k
+        return dict(sorted(merged.items())) if merged else None
+
     return SimResult(
         scheme=name if name is not None else results[0].scheme,
         n_jobs=sum(r.n_jobs for r in results),
@@ -95,6 +104,7 @@ def mean_over_seeds(results: Sequence[SimResult], name: Optional[str] = None) ->
             np.nanmean([r.avg_tokens_per_s for r in results])
         ),
         windows=win_mean(),
+        drop_reasons=reason_sum(),
         **{f: opt_mean(f) for f in _OPTIONAL_FIELDS},
     )
 

@@ -25,7 +25,11 @@ from typing import Optional
 
 __all__ = [
     "ICCSystem",
+    "exp_cdf",
+    "exp_quantile",
     "exp_sum_cdf",
+    "sojourn_cdf",
+    "ks_distance",
     "joint_satisfaction",
     "disjoint_satisfaction",
     "service_capacity",
@@ -64,10 +68,70 @@ def exp_sum_cdf(a: float, b: float, t: float) -> float:
     return 1.0 - (b * math.exp(-a * t) - a * math.exp(-b * t)) / (b - a)
 
 
-def _exp_cdf(rate: float, t: float) -> float:
+def exp_cdf(rate: float, t: float) -> float:
+    """P(X <= t) for X ~ Exp(rate): the M/M/1 sojourn-time CDF at rate
+    mu - lambda. Public because the telemetry conformance validator
+    compares measured sojourn samples against it."""
     if t <= 0.0:
         return 0.0
     return -math.expm1(-rate * t)
+
+
+# internal alias kept for the satisfaction closed forms below
+_exp_cdf = exp_cdf
+
+
+def exp_quantile(rate: float, q: float) -> float:
+    """Inverse of `exp_cdf`: the q-quantile of Exp(rate). Tolerance bands
+    in the conformance report are expressed at these quantiles."""
+    if not 0.0 <= q < 1.0:
+        raise ValueError(f"q must be in [0, 1), got {q}")
+    if rate <= 0.0:
+        raise ValueError(f"rate must be positive, got {rate}")
+    return -math.log1p(-q) / rate
+
+
+def sojourn_cdf(sys: ICCSystem, lam: float, stage: str, t: float) -> float:
+    """Closed-form sojourn-time CDF of a tagged job at offered load `lam`
+    (paper Lemma 1: the two M/M/1 sojourns are independent exponentials).
+
+    ``stage`` selects which latency the CDF describes:
+
+      comm   air-interface sojourn            ~ Exp(mu1 - lam)
+      comp   compute-queue sojourn            ~ Exp(mu2 - lam)
+      e2e    comm + wireline + comp           (hypoexponential, shifted
+             by the constant t_wireline)
+    """
+    if not sys.stable(lam):
+        raise ValueError(f"system unstable at lam={lam}")
+    if stage == "comm":
+        return exp_cdf(sys.mu1 - lam, t)
+    if stage == "comp":
+        return exp_cdf(sys.mu2 - lam, t)
+    if stage == "e2e":
+        return exp_sum_cdf(sys.mu1 - lam, sys.mu2 - lam, t - sys.t_wireline)
+    raise ValueError(f"unknown stage {stage!r}; use comm/comp/e2e")
+
+
+def ks_distance(samples, cdf) -> float:
+    """Kolmogorov-Smirnov distance sup_t |F_emp(t) - F(t)| between an
+    empirical sample and a model CDF callable.
+
+    The sup over a continuous F against a right-continuous step function
+    is attained at a sample point, approached from one side or the other,
+    so it suffices to evaluate F at the sorted samples. This is the
+    tolerance metric of the analytic-conformance check (paper Fig. 4 as a
+    permanent self-test): under H0 the statistic concentrates around
+    ~1.36/sqrt(n) at the 95% level."""
+    xs = sorted(float(x) for x in samples)
+    n = len(xs)
+    if n == 0:
+        raise ValueError("ks_distance needs at least one sample")
+    d = 0.0
+    for i, x in enumerate(xs):
+        f = cdf(x)
+        d = max(d, abs((i + 1) / n - f), abs(i / n - f))
+    return d
 
 
 def joint_satisfaction(sys: ICCSystem, lam: float, b_total: float) -> float:

@@ -51,6 +51,14 @@ class Job:
     # False when an admission controller rejected the job at generation
     # (it never entered the uplink; also marked dropped)
     admitted: bool = True
+    # structured loss attribution, set wherever `dropped` is set:
+    #   queue_drop        infeasible at dispatch/admission (deadline math)
+    #   deadline_preempt  running job preempted mid-generation (batched)
+    #   kv_reject         KV reservation can never fit the cache
+    #   quota             admission controller rejected at generation
+    # None for completed jobs and for jobs still in-system at sim end
+    # (score_jobs books those as "unfinished")
+    drop_reason: Optional[str] = None
 
     @property
     def t_comm(self) -> float:
@@ -204,9 +212,11 @@ class ComputeNode:
                 svc = self.service_time(job)
             if self.drop_infeasible and start + svc > self._drop_horizon(job):
                 job.dropped = True
+                job.drop_reason = "queue_drop"
                 self.dropped.append(job)
                 if rec is not None:
-                    rec.job_event("drop", job.uid, start, stage="queue")
+                    rec.job_event("drop", job.uid, start, stage="queue",
+                                  reason="queue_drop")
                 continue
             job.t_complete = start + svc
             self.busy_until = job.t_complete

@@ -122,6 +122,10 @@ class SimResult:
     # transient satisfaction: one dict per scoring window (t0/t1/n/
     # satisfaction/drop_rate), present only when window_s was requested
     windows: Optional[List[dict]] = None
+    # per-reason loss counts over the scored span (Job.drop_reason
+    # glossary plus "unfinished" for jobs still in-system at sim end);
+    # None when nothing was lost — sorted keys, so JSON is stable
+    drop_reasons: Optional[Dict[str, int]] = None
     # columnar trace (repro.telemetry EventRecorder.to_telemetry), attached
     # only when the run was traced; None on every untraced run
     telemetry: Optional[dict] = None
@@ -318,13 +322,26 @@ class SlotEngine:
         return self.fast_forward and self.is_idle()
 
     def next_arrival_at_or_after(self, s: int) -> int:
-        """Smallest slot >= `s` with any pre-drawn arrival (or `n_slots`)."""
+        """Smallest slot >= `s` with any pre-drawn arrival (or `n_slots`).
+
+        Pure query: unlike the stepping path's `_chunk_for`, the search
+        never discards chunks, because drivers may clamp the returned
+        jump (controller epochs, probe cadence) and then step slots
+        *before* the slot found here — the chunks in between must still
+        hold their unconsumed arrivals. Chunk draws stay in strict order,
+        so the RNG stream is identical either way.
+        """
         while s < self.n_slots:
-            ck = self._chunk_for(s)
-            hits = np.flatnonzero(ck.any_arrival[s - ck.start:])
-            if hits.size:
-                return s + int(hits[0])
-            s = ck.end
+            while self._drawn <= s:
+                self._draw_chunk()
+            for ck in self._chunks:
+                if ck.end <= s:
+                    continue
+                lo = s - ck.start if s > ck.start else 0
+                hits = np.flatnonzero(ck.any_arrival[lo:])
+                if hits.size:
+                    return ck.start + lo + int(hits[0])
+            s = self._drawn  # every drawn chunk past `s` is arrival-free
         return self.n_slots
 
     def next_event_at_or_after(self, s: int) -> int:
@@ -424,8 +441,9 @@ class SlotEngine:
             # touches the uplink but still counts against satisfaction
             j.dropped = True
             j.admitted = False
+            j.drop_reason = "quota"
             if rec is not None:
-                rec.job_event("rejected", j.uid, now)
+                rec.job_event("rejected", j.uid, now, reason="quota")
             return
         self._in_flight[ue].append([j, j.bits])
         self._n_in_flight += 1
@@ -594,6 +612,11 @@ def score_jobs(
             win_sat[w] += int(ok)
             win_drop[w] += int(failed)
     n_dropped = sum(1 for j in scored if j.dropped or math.isnan(j.t_complete))
+    reasons: Dict[str, int] = {}
+    for j in scored:
+        if j.dropped or math.isnan(j.t_complete):
+            r = j.drop_reason if j.drop_reason is not None else "unfinished"
+            reasons[r] = reasons.get(r, 0) + 1
     windows = None
     if n_win:
         # a window with no generated jobs has no satisfaction to report
@@ -630,6 +653,7 @@ def score_jobs(
         p95_tbt=pct(tbt, 95),
         p99_tbt=pct(tbt, 99),
         windows=windows,
+        drop_reasons=dict(sorted(reasons.items())) if reasons else None,
     )
 
 
@@ -731,10 +755,17 @@ def simulate(
             next_epoch += epoch_slots
         if engine.can_skip():
             # idle-slot fast-forward: jump to the next arrival-process
-            # event, clamped at the next controller epoch
+            # event, clamped at the next controller epoch — and, when
+            # tracing, at the next probe sample, so the time-series keep
+            # their cadence across idle air-interface spans (the compute
+            # node may still be draining; Little's-law checks need the
+            # queue-depth series to cover those spans). Results are
+            # unaffected: skipping is a pure performance path.
             nxt = engine.next_event_at_or_after(s)
             if ctl is not None:
                 nxt = min(nxt, next_epoch)
+            if rec is not None:
+                nxt = min(nxt, next_sample)
             if nxt > s:
                 engine.skip_slots(s, min(nxt, n_slots))
                 s = nxt

@@ -5,6 +5,7 @@
     python -m repro.experiments run network_capacity --workers -1 \
         --out benchmarks/results/network_capacity_run.json
     python -m repro.experiments run network_capacity --quick
+    python -m repro.experiments report BENCH_network.json --format md
     python -m repro.experiments validate-bench
 
 ``run --quick`` resolves the registered ``<name>_quick`` variant — the
@@ -52,6 +53,25 @@ def main(argv=None) -> int:
                             "point: the traced arm's highest rate, seed 0")
     p_run.add_argument("--trace-arm", default=None, metavar="NAME",
                        help="arm to export with --trace (default: first)")
+    p_run.add_argument("--sample-every", type=float, default=None,
+                       metavar="SECONDS",
+                       help="probe-sampling interval for --trace "
+                            "time-series (default: the recorder's 0.01 s; "
+                            "throttles probes only, never job events)")
+
+    p_rep = sub.add_parser(
+        "report",
+        help="render a capacity report from a stored result JSON "
+             "(raw ExperimentResult or tracked BENCH_*.json) — offline, "
+             "deterministic, nothing is re-simulated",
+    )
+    p_rep.add_argument("path")
+    p_rep.add_argument("--format", choices=("md", "html"), default="md")
+    p_rep.add_argument("--out", default=None,
+                       help="write the report here (default: stdout)")
+    p_rep.add_argument("--ref", default=None, metavar="PATH",
+                       help="reference result JSON: adds capacity and "
+                            "per-rate satisfaction deltas vs it")
 
     p_val = sub.add_parser(
         "validate-bench",
@@ -76,7 +96,18 @@ def main(argv=None) -> int:
     if args.cmd == "run":
         name = f"{args.name}_quick" if args.quick else args.name
         spec = get_experiment(name)
-        result = run(spec, workers=args.workers, trace=args.trace is not None)
+        if args.trace_arm is not None:
+            # fail fast, before any simulation runs: a typo'd arm name
+            # used to surface only after the whole sweep finished
+            known = [a.name for a in spec.resolve_arms()]
+            if args.trace_arm not in known:
+                print(f"error: unknown --trace-arm {args.trace_arm!r}; "
+                      f"available arms: {', '.join(known)}",
+                      file=sys.stderr)
+                return 2
+        result = run(spec, workers=args.workers,
+                     trace=args.trace is not None,
+                     sample_every_s=args.sample_every)
         print(result.summary())
         if args.out:
             with open(args.out, "w") as f:
@@ -98,6 +129,19 @@ def main(argv=None) -> int:
                   f"(arm={arm.name}, rate={point.rate:g}, seed 0; "
                   f"{tel['counts']['jobs']} jobs, "
                   f"{tel['counts']['events']} events)")
+        return 0
+
+    if args.cmd == "report":
+        from ..telemetry.report import generate_report
+
+        text = generate_report(args.path, fmt=args.format,
+                               ref_path=args.ref)
+        if args.out:
+            with open(args.out, "w") as f:
+                f.write(text)
+            print(f"wrote {args.out}")
+        else:
+            print(text, end="")
         return 0
 
     if args.cmd == "validate-bench":

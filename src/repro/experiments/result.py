@@ -26,6 +26,7 @@ __all__ = [
     "CapacityCurve",
     "ArmResult",
     "ExperimentResult",
+    "load_result",
 ]
 
 
@@ -175,6 +176,19 @@ class ExperimentResult:
     def to_json(self, points: str = "full") -> str:
         return json.dumps(self.to_dict(points=points), indent=1, sort_keys=True)
 
+    def drop_reason_totals(self) -> Dict[str, Dict[str, int]]:
+        """Per-arm loss attribution summed over every stored point mean
+        (empty dicts when the result predates reason codes or stores no
+        points). Keys sorted for stable serialization."""
+        out: Dict[str, Dict[str, int]] = {}
+        for a in self.arms:
+            merged: Dict[str, int] = {}
+            for p in a.points:
+                for reason, k in (p.mean.drop_reasons or {}).items():
+                    merged[reason] = merged.get(reason, 0) + k
+            out[a.name] = dict(sorted(merged.items()))
+        return out
+
     # ------------------------------------------------------------ display
     def summary(self) -> str:
         lines = [f"experiment {self.experiment}  "
@@ -196,3 +210,29 @@ class ExperimentResult:
                 f"({slowest.wall_clock_s:.1f}s of {total:.1f}s sim time)"
             )
         return "\n".join(lines)
+
+
+def load_result(path: str):
+    """Load a result JSON from disk: either a raw ``ExperimentResult``
+    dump (``run --out``) or a tracked ``BENCH_*.json`` wrapper
+    (``{schema_version, experiment, headline, result}``).
+
+    Returns ``(result, headline)`` — ``headline`` is the wrapper's compact
+    claim dict, or None for raw results. The single loader the offline
+    report generator (`repro.telemetry.report`) uses, so both forms render
+    without re-simulating anything.
+    """
+    with open(path) as f:
+        doc = json.load(f)
+    if not isinstance(doc, dict):
+        raise ValueError(f"{path}: not a JSON object")
+    if "schema_version" not in doc:
+        raise ValueError(
+            f"{path}: not an experiment result (no schema_version; "
+            f"top-level keys: {sorted(doc)[:6]}) — only ExperimentResult "
+            f"dumps and tracked capacity baselines render as reports"
+        )
+    if "result" in doc and "arms" not in doc:
+        # tracked-baseline wrapper around the ExperimentResult payload
+        return ExperimentResult.from_dict(doc["result"]), doc.get("headline")
+    return ExperimentResult.from_dict(doc), None

@@ -156,7 +156,11 @@ def _multi_cell_point(
 
 
 def run_point(
-    arm: ResolvedArm, lam: float, seed_idx: int, trace: bool = False
+    arm: ResolvedArm,
+    lam: float,
+    seed_idx: int,
+    trace: bool = False,
+    sample_every_s: Optional[float] = None,
 ) -> PointRun:
     """One (arm, rate, seed) grid point (module-level: picklable).
 
@@ -164,12 +168,17 @@ def run_point(
     `repro.telemetry.EventRecorder`; the columnar telemetry dict rides back
     on ``PointRun.result.telemetry`` (plain data — it crosses the process
     pool as a pickle like every other field). Results are otherwise
-    bit-identical to an untraced run."""
+    bit-identical to an untraced run. ``sample_every_s`` overrides the
+    recorder's probe-sampling interval (None keeps the recorder default);
+    it throttles the time-series only — job timelines never move."""
     recorder = None
     if trace:
         from ..telemetry import EventRecorder
 
-        recorder = EventRecorder()
+        recorder = (
+            EventRecorder() if sample_every_s is None
+            else EventRecorder(sample_every_s=sample_every_s)
+        )
     t0 = time.perf_counter()
     if arm.system.kind == "multi_cell":
         pr = _multi_cell_point(arm, lam, seed_idx, recorder=recorder)
@@ -186,6 +195,7 @@ def run(
     workers: Union[int, str, None] = None,
     chunk: Union[int, str, None] = None,
     trace: bool = False,
+    sample_every_s: Optional[float] = None,
 ) -> ExperimentResult:
     """Run every arm of `spec` and return the unified result.
 
@@ -199,14 +209,15 @@ def run(
     knob, deliberately *not* a spec field (tracing never changes what the
     experiment measures, and the spec schema stays at its pinned version).
     Intended for quick/reduced grids; a full sweep holds every point's
-    event stream in memory at once.
+    event stream in memory at once. `sample_every_s` tunes the traced
+    probe cadence (None = the recorder's default interval).
     """
     spec.validate()
     arms = spec.resolve_arms()
     if workers is None:
         workers = spec.sweep.workers
     tasks = [
-        (arm, float(lam), s, trace)
+        (arm, float(lam), s, trace, sample_every_s)
         for arm in arms
         for lam in arm.sweep.rates
         for s in range(arm.sweep.n_seeds)

@@ -330,6 +330,9 @@ def simulate_network(
                 nxt = min(nxt, events[0][0])
             if ctl is not None:
                 nxt = min(nxt, next_epoch)
+            if rec is not None:
+                # keep probe cadence across idle spans (see core.simulate)
+                nxt = min(nxt, next_sample)
             if nxt > s:
                 for e in engines:
                     e.skip_slots(s, min(nxt, n_slots))

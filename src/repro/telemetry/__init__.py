@@ -1,4 +1,4 @@
-"""Observability layer: trace recorders, probe series, Chrome-trace export.
+"""Observability layer: trace recorders, derived metrics, capacity reports.
 
 Pass an `EventRecorder` as ``recorder=`` to `repro.core.simulate` or
 `repro.network.simulate_network` (or ``trace=True`` to
@@ -6,6 +6,16 @@ Pass an `EventRecorder` as ``recorder=`` to `repro.core.simulate` or
 per-job lifecycle events, stage-latency breakdowns, sampled probe series,
 and controller epoch records. The default `NullRecorder` is provably free:
 fixed-seed results stay bit-identical to untraced runs.
+
+On top of the raw capture sit three read-only consumers:
+
+  * `repro.telemetry.metrics` — derived aggregates over the columnar
+    telemetry dict (`summarize`, stage percentiles, Little's-law
+    cross-checks) plus the `mm1_conformance` analytic validator;
+  * `repro.telemetry.report` — deterministic offline md/html capacity
+    reports from stored `ExperimentResult` / ``BENCH_*.json`` files
+    (``python -m repro.experiments report``);
+  * `repro.telemetry.chrome` — Perfetto-loadable Chrome traces.
 """
 
 from .recorder import (
@@ -18,6 +28,13 @@ from .recorder import (
     active,
 )
 from .chrome import chrome_trace, write_chrome_trace
+from .metrics import (
+    littles_law_check,
+    mm1_conformance,
+    stage_percentiles,
+    summarize,
+)
+from .report import generate_report, render_report
 
 __all__ = [
     "STAGE_FIELDS",
@@ -29,4 +46,10 @@ __all__ = [
     "active",
     "chrome_trace",
     "write_chrome_trace",
+    "summarize",
+    "stage_percentiles",
+    "littles_law_check",
+    "mm1_conformance",
+    "generate_report",
+    "render_report",
 ]

@@ -148,6 +148,23 @@ def chrome_trace(tel: dict) -> dict:
                 ev.append({"name": track, "ph": "C", "ts": t * _US,
                            "pid": p, "tid": 0, "args": args})
 
+    # mobility re-homings: one paired instant on the source and the target
+    # cell tracks, so a rebalanced burst reads as "left here / landed there"
+    # when both process groups are open side by side
+    rh = tel.get("rehomes", {})
+    for j, t in enumerate(rh.get("t", [])):
+        t = _num(t)
+        if t is None:
+            continue
+        frm, to = rh["from_cell"][j], rh["to_cell"][j]
+        args = {"uid": rh["uid"][j], "from_cell": frm, "to_cell": to}
+        for name, cell in (("rehome_out", frm), ("rehome_in", to)):
+            ev.append({
+                "name": name, "cat": "mobility", "ph": "i", "s": "p",
+                "ts": t * _US, "pid": pid(f"cell{cell}"), "tid": 0,
+                "args": args,
+            })
+
     for rec in tel.get("epochs", []):
         t = _num(rec.get("t"))
         if t is None:

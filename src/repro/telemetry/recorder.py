@@ -116,7 +116,8 @@ class _JobTrace:
     __slots__ = (
         "uid", "cell", "ue", "route", "t_gen", "t_uplink", "t_arrival",
         "t_start", "t_complete", "t_drop", "prefill_s", "decode_s",
-        "n_prefill_chunks", "n_decode", "drop_stage", "n_rehomed",
+        "n_prefill_chunks", "n_decode", "drop_stage", "drop_reason",
+        "n_rehomed",
     )
 
     def __init__(self, uid: int, t_gen: float, cell: int, ue: int):
@@ -135,6 +136,7 @@ class _JobTrace:
         self.n_prefill_chunks = 0
         self.n_decode = 0
         self.drop_stage: Optional[str] = None
+        self.drop_reason: Optional[str] = None
         self.n_rehomed = 0
 
     def stages(self) -> Optional[Tuple[float, ...]]:
@@ -178,6 +180,7 @@ class EventRecorder:
         self.events: List[Tuple[float, str, int]] = []
         self.series: Dict[str, Dict[str, list]] = {}
         self.epochs: List[dict] = []
+        self.rehomes: List[Tuple[float, int, int, int]] = []
         self._jobs: Dict[int, _JobTrace] = {}
 
     # ------------------------------------------------------------ lifecycle
@@ -227,10 +230,21 @@ class EventRecorder:
                 else "admission" if kind == "rejected"
                 else fields.get("stage", "queue")
             )
+            # structured loss attribution (Job.drop_reason glossary);
+            # events from older producers fall back to a stage-derived code
+            jt.drop_reason = fields.get("reason") or (
+                "deadline_preempt" if kind == "preempt"
+                else "quota" if kind == "rejected"
+                else "queue_drop"
+            )
             jt.t_drop = t
         elif kind == "rehomed":
             jt.n_rehomed += 1
+            frm = jt.cell
             jt.cell = fields.get("cell", jt.cell)
+            # (t, uid, from_cell, to_cell): the Chrome exporter renders a
+            # paired instant on the source and target cell tracks
+            self.rehomes.append((t, uid, frm, jt.cell))
         # unknown kinds: kept in the event stream, no columnar effect
 
     # --------------------------------------------------------------- probes
@@ -256,6 +270,27 @@ class EventRecorder:
         st = jt.stages()
         return dict(zip(STAGE_FIELDS, st)) if st is not None else None
 
+    def track_names(self) -> List[str]:
+        """Probe tracks sampled so far, in first-seen (deterministic)
+        order — e.g. ``cell0.uplink``, ``mec.queue``, ``mec.batch``."""
+        return list(self.series)
+
+    def drop_reason_counts(self) -> Dict[str, int]:
+        """Per-reason loss counts over every traced job (sorted keys, so
+        the dict serializes deterministically)."""
+        counts: Dict[str, int] = {}
+        for jt in self._jobs.values():
+            if jt.drop_reason is not None:
+                counts[jt.drop_reason] = counts.get(jt.drop_reason, 0) + 1
+        return dict(sorted(counts.items()))
+
+    def to_metrics(self, **kwargs) -> dict:
+        """Derived-metric rollup of everything captured so far — a
+        convenience front-end for `repro.telemetry.metrics.summarize`."""
+        from .metrics import summarize
+
+        return summarize(self.to_telemetry(), **kwargs)
+
     def to_telemetry(self, meta: Optional[dict] = None) -> dict:
         """Compact columnar export: plain lists keyed by column, aligned
         across ``jobs`` and ``stages`` (one row per generated job; stage
@@ -274,6 +309,7 @@ class EventRecorder:
             "t_complete": [j.t_complete for j in jobs],
             "t_drop": [j.t_drop for j in jobs],
             "drop_stage": [j.drop_stage for j in jobs],
+            "drop_reason": [j.drop_reason for j in jobs],
             "n_prefill_chunks": [j.n_prefill_chunks for j in jobs],
             "n_decode": [j.n_decode for j in jobs],
             "n_rehomed": [j.n_rehomed for j in jobs],
@@ -293,11 +329,19 @@ class EventRecorder:
                 for track, s in self.series.items()
             },
             "epochs": list(self.epochs),
+            "rehomes": {
+                "t": [r[0] for r in self.rehomes],
+                "uid": [r[1] for r in self.rehomes],
+                "from_cell": [r[2] for r in self.rehomes],
+                "to_cell": [r[3] for r in self.rehomes],
+            },
             "counts": {
                 "jobs": len(jobs),
                 "events": len(self.events),
                 "completed": sum(r is not None for r in stage_rows),
                 "dropped": sum(j.drop_stage is not None for j in jobs),
+                "drop_reasons": self.drop_reason_counts(),
+                "rehomes": len(self.rehomes),
                 "epochs": len(self.epochs),
             },
         }

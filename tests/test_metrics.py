@@ -1,0 +1,251 @@
+"""Telemetry analytics: derived metrics, conformance, capacity reports.
+
+Four contracts pin the metrics/report layer on top of the PR-6 recorder:
+
+  1. **Rollups are pure**: `summarize()` and every helper are functions of
+     the telemetry dict alone — the same traced run yields bit-identical
+     JSON on every call and across repeated fixed-seed runs.
+  2. **Cross-instrument consistency**: Little's law computed from per-job
+     event timestamps agrees with the independently sampled probe series
+     on the compute queue (the recorder's two instruments describe one
+     system).
+  3. **Analytic conformance**: the real slot engine, driven into an
+     M/M/1-exact regime, matches `core.queueing.ICCSystem`'s closed forms
+     (sojourn KS distance, Def.-1 satisfaction) — the paper's Fig. 4
+     simulation-vs-theory claim as a permanent self-check. The fixed-seed
+     pin asserts *tighter* bands than the seed-robust defaults, so any
+     engine drift that skews queueing behaviour fails CI.
+  4. **Reports are deterministic**: rendering a stored result twice is
+     byte-identical, in both md and html, and `load_result` round-trips
+     raw dumps and tracked BENCH wrappers.
+"""
+
+import json
+import os
+import pickle
+
+import pytest
+
+from repro.core.simulator import SCHEMES, SimConfig, simulate
+from repro.core.latency_model import GH200_NVL2, LLAMA2_7B, ModelService
+from repro.telemetry import EventRecorder, summarize
+from repro.telemetry.metrics import (
+    ExpService,
+    drop_reason_counts,
+    goodput_timeline,
+    littles_law_check,
+    mm1_conformance,
+    occupancy_distribution,
+    stage_percentiles,
+    time_weighted_mean,
+    utilization_timeline,
+)
+
+SVC = ModelService(GH200_NVL2.scaled(2), LLAMA2_7B, "paper")
+
+
+def _traced_run(seed=3):
+    rec = EventRecorder()
+    cfg = SimConfig(n_ues=60, sim_time=6.0, seed=seed)
+    res = simulate(SCHEMES["icc"], cfg, SVC, recorder=rec)
+    return res, rec.to_telemetry()
+
+
+@pytest.fixture(scope="module")
+def traced():
+    return _traced_run()
+
+
+# ----------------------------------------------------------------- rollups
+class TestRollups:
+    def test_summarize_bit_identical_across_runs(self, traced):
+        """Same call twice AND a fresh fixed-seed run: one JSON blob."""
+        _, tel = traced
+        a = json.dumps(summarize(tel), sort_keys=True)
+        b = json.dumps(summarize(tel), sort_keys=True)
+        assert a == b
+        _, tel2 = _traced_run()
+        assert json.dumps(summarize(tel2), sort_keys=True) == a
+
+    def test_stage_percentiles_shape(self, traced):
+        res, tel = traced
+        overall = stage_percentiles(tel)["all"]
+        assert set(overall) == {"radio", "transport", "queue", "prefill",
+                                "decode", "stall", "e2e"}
+        e2e = overall["e2e"]
+        assert e2e["n"] == tel["counts"]["completed"] > 0
+        assert 0.0 < e2e["p50"] <= e2e["p90"] <= e2e["p95"] <= e2e["p99"]
+        # slicing partitions the completed population
+        by_ue = stage_percentiles(tel, by="ue")
+        assert sum(g["e2e"]["n"] for g in by_ue.values()) == e2e["n"]
+        with pytest.raises(ValueError):
+            stage_percentiles(tel, by="flavor")
+
+    def test_goodput_timeline_conserves_counts(self, traced):
+        _, tel = traced
+        g = goodput_timeline(tel, bucket_s=0.5)
+        assert sum(g["generated"]) == tel["counts"]["jobs"]
+        assert sum(g["completed"]) == tel["counts"]["completed"]
+        assert sum(g["dropped"]) == tel["counts"]["dropped"]
+        assert len(g["t"]) == len(g["goodput_jobs_per_s"])
+        with pytest.raises(ValueError):
+            goodput_timeline(tel, bucket_s=0.0)
+
+    def test_time_weighted_mean_step_hold(self):
+        # 2 holds on [0,1), 4 on [1,3), 8 on [3,4] -> (2 + 8 + 8) / 4
+        assert time_weighted_mean([0, 1, 3], [2, 4, 8], 0, 4) == 4.5
+        assert time_weighted_mean([], [], 0, 1) is None
+        assert time_weighted_mean([0.0], [5.0], 2.0, 1.0) is None
+        # constant series: window position is irrelevant
+        assert time_weighted_mean([0, 1, 2], [3, 3, 3], 0.5, 1.7) == 3.0
+
+    def test_occupancy_and_utilization_cover_probe_tracks(self, traced):
+        _, tel = traced
+        occ = occupancy_distribution(tel)
+        assert set(occ) == set(tel["series"])
+        q = occ["node.queue"]["depth"]
+        assert q["n"] > 0 and q["mean_tw"] is not None and q["max"] >= 0
+        util = utilization_timeline(tel, bucket_s=1.0)
+        assert len(util["node.queue"]["depth"]) == len(util["node.queue"]["t"])
+
+    def test_littles_law_events_vs_probes_agree(self, traced):
+        _, tel = traced
+        entries = littles_law_check(tel)
+        node = [e for e in entries if e["kind"] == "node"]
+        assert node and node[0]["interpretation"] == "wait"
+        assert node[0]["rel_err"] is not None and node[0]["rel_err"] < 0.2
+        # every series-backed queueing track got an entry
+        assert {e["track"] for e in entries} >= {"node.queue"}
+
+    def test_drop_reason_counts_match_recorder(self, traced):
+        _, tel = traced
+        counts = drop_reason_counts(tel)
+        assert counts == tel["counts"]["drop_reasons"]
+        assert sum(counts.values()) == tel["counts"]["dropped"]
+        known = {"deadline_preempt", "queue_drop", "kv_reject", "quota"}
+        assert set(counts) <= known
+
+    def test_schema_guard(self):
+        with pytest.raises(ValueError):
+            summarize({"schema": 99})
+
+
+# ------------------------------------------------------------- conformance
+class TestConformance:
+    def test_mm1_fixed_seed_pin(self):
+        """The CI conformance gate: fixed seed is exactly reproducible, so
+        the bands here are *tighter* than the seed-robust defaults — any
+        engine change that moves the queueing behaviour trips this."""
+        r = mm1_conformance(tol_ks=0.05, tol_sat=0.025, tol_little=0.1)
+        assert r["passed"], r["checks"]
+        by = {c["name"]: c for c in r["checks"]}
+        assert by["radio_near_constant"]["value"] <= 2e-3
+        assert by["ks_comp"]["value"] <= 0.05
+        assert by["ks_e2e"]["value"] <= 0.05
+        assert by["satisfaction_abs_err"]["value"] <= 0.025
+        assert by["littles_law_rel_err"]["value"] <= 0.1
+        assert r["n_jobs"] > 2000  # the regime actually generated load
+        # closed-form quantiles track the measurement (Exp(mu2 - lam))
+        p50 = r["comp_quantiles_s"]["p50"]
+        assert abs(p50["measured"] - p50["model"]) / p50["model"] < 0.25
+
+    def test_expservice_deterministic_and_picklable(self):
+        a, b = ExpService(100.0, seed=5), ExpService(100.0, seed=5)
+        draws = [a(None) for _ in range(4)]
+        assert draws == [b(None) for _ in range(4)]
+        c = pickle.loads(pickle.dumps(ExpService(100.0, seed=5)))
+        assert [c(None) for _ in range(4)] == draws
+        with pytest.raises(ValueError):
+            ExpService(0.0)
+
+
+# ----------------------------------------------------- probe-rate satellite
+class TestSampleEvery:
+    def test_throttle_changes_probe_density_not_results(self):
+        cfg = SimConfig(n_ues=40, sim_time=4.0, seed=2)
+        dense, sparse = EventRecorder(), EventRecorder(sample_every_s=0.1)
+        r1 = simulate(SCHEMES["icc"], cfg, SVC, recorder=dense)
+        r2 = simulate(SCHEMES["icc"], cfg, SVC, recorder=sparse)
+        # probe cadence is an observer knob: results stay bit-identical
+        assert (r1.n_jobs, r1.satisfaction, r1.avg_e2e) == \
+               (r2.n_jobs, r2.satisfaction, r2.avg_e2e)
+        t1 = dense.to_telemetry()
+        t2 = sparse.to_telemetry()
+        n1 = len(t1["series"]["node.queue"]["t"])
+        n2 = len(t2["series"]["node.queue"]["t"])
+        assert n2 < n1 / 3  # 10x sparser cadence, generous margin
+        # job-lifecycle columns are untouched by the throttle
+        assert t1["jobs"] == t2["jobs"]
+
+
+# ----------------------------------------------------------------- reports
+class TestReports:
+    def _need_baseline(self):
+        if not os.path.exists("BENCH_network.json"):
+            pytest.skip("not at repo root")
+
+    def test_tracked_baseline_renders_byte_identical(self):
+        from repro.telemetry.report import generate_report
+
+        self._need_baseline()
+        a = generate_report("BENCH_network.json")
+        assert a == generate_report("BENCH_network.json")
+        assert a.startswith("# Capacity report: network_capacity")
+        for arm in ("local_only", "mec_only", "least_loaded", "slack_aware"):
+            assert arm in a
+
+    def test_html_and_ref_delta(self):
+        from repro.telemetry.report import generate_report
+
+        self._need_baseline()
+        h = generate_report("BENCH_network.json", fmt="html")
+        assert h.startswith("<!doctype html>") and "</html>" in h
+        assert "<table>" in h
+        d = generate_report("BENCH_network.json",
+                            ref_path="BENCH_network.json")
+        assert "Delta vs reference" in d
+        with pytest.raises(ValueError):
+            generate_report("BENCH_network.json", fmt="pdf")
+
+    def test_load_result_roundtrips_both_forms(self, tmp_path):
+        from repro.experiments.result import load_result
+
+        self._need_baseline()
+        res, headline = load_result("BENCH_network.json")
+        assert headline is not None and res.experiment == "network_capacity"
+        raw = tmp_path / "raw.json"
+        raw.write_text(res.to_json(points="none"))
+        res2, headline2 = load_result(str(raw))
+        assert headline2 is None
+        assert res2.to_json(points="none") == res.to_json(points="none")
+
+    def test_load_result_rejects_non_results(self, tmp_path):
+        from repro.experiments.result import load_result
+
+        p = tmp_path / "other.json"
+        p.write_text(json.dumps({"traceEvents": [], "otherData": {}}))
+        with pytest.raises(ValueError, match="schema_version"):
+            load_result(str(p))
+        p.write_text(json.dumps([1, 2, 3]))
+        with pytest.raises(ValueError, match="JSON object"):
+            load_result(str(p))
+
+    def test_report_cli(self, tmp_path, capsys):
+        from repro.experiments.__main__ import main
+
+        self._need_baseline()
+        out = tmp_path / "r.md"
+        assert main(["report", "BENCH_network.json",
+                     "--out", str(out)]) == 0
+        capsys.readouterr()
+        assert out.read_text().startswith("# Capacity report:")
+
+    def test_trace_arm_fails_fast_on_unknown(self, capsys):
+        """Satellite: a typo'd --trace-arm dies at parse time, before any
+        simulation runs, and names the arms that do exist."""
+        from repro.experiments.__main__ import main
+
+        assert main(["run", "network_capacity", "--quick",
+                     "--trace", "/dev/null", "--trace-arm", "nope"]) == 2
+        err = capsys.readouterr().err
+        assert "unknown --trace-arm" in err and "slack_aware" in err

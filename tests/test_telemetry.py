@@ -304,6 +304,48 @@ class TestChromeTrace:
                 assert depth[key] >= 0, key
         assert all(v == 0 for v in depth.values())
 
+    def test_mobility_rehomes_paired_across_cell_tracks(self):
+        """A mobility run with actual Xn re-homings exports every re-homed
+        burst as a *paired* instant — `rehome_out` on the source cell's
+        track, `rehome_in` on the target's, same timestamp and uid — and
+        the async job spans stay balanced even though those jobs changed
+        process mid-flight."""
+        from repro.control.mobility import MobilityConfig
+
+        rec = EventRecorder()
+        cfg = config_for_load(
+            three_cell_hetero(), SCENARIOS["flash_crowd"], 30.0,
+            sim_time=4.0, warmup=0.5, seed=4,
+            mobility=MobilityConfig(n_roamers=6, dwell_mean_s=0.25),
+        )
+        net = simulate_network(cfg, "slack_aware", recorder=rec)
+        assert net.n_rehomed > 0  # the config must actually exercise Xn
+        tel = rec.to_telemetry()
+        assert tel["counts"]["rehomes"] == net.n_rehomed
+
+        ct = chrome_trace(tel)
+        json.dumps(ct, allow_nan=False)
+        ev = ct["traceEvents"]
+        outs = [e for e in ev if e.get("name") == "rehome_out"]
+        ins = [e for e in ev if e.get("name") == "rehome_in"]
+        assert len(outs) == len(ins) == net.n_rehomed
+        # paired: identical (ts, uid) across out/in, but on different pids
+        assert ({(e["ts"], e["args"]["uid"]) for e in outs}
+                == {(e["ts"], e["args"]["uid"]) for e in ins})
+        pid_name = {e["pid"]: e["args"]["name"] for e in ev
+                    if e.get("ph") == "M"}
+        for o in outs:
+            assert pid_name[o["pid"]] == f"cell{o['args']['from_cell']}"
+        for i in ins:
+            assert pid_name[i["pid"]] == f"cell{i['args']['to_cell']}"
+            assert i["args"]["from_cell"] != i["args"]["to_cell"]
+        # source and target tracks both exist as real process groups
+        cells = {pid_name[e["pid"]] for e in outs + ins}
+        assert len(cells) >= 2
+        # async spans still balance with re-homed jobs in the mix
+        phases = [e["ph"] for e in ev]
+        assert phases.count("b") == phases.count("e") > 0
+
     def test_write_roundtrip(self, traced_batched_single, tmp_path):
         res, _rec = traced_batched_single
         path = tmp_path / "trace.json"
