@@ -1,0 +1,212 @@
+"""ICC vs MEC survivability under injected faults (beyond-paper).
+
+A formatting layer over the declarative experiment API: the grid lives in
+`repro.experiments.resilience_spec` (registered as ``resilience``; reduced
+CI settings as ``resilience_quick``) and runs through the one
+`repro.experiments.run` runner. Six arms — {icc=slack_aware,
+mec=mec_only} x {baseline, node_crash, backhaul} on the 3-cell hetero
+fleet — where both fault cases target the MEC tier, the centralized
+baseline's single point of failure:
+
+  node_crash  the pooled MEC node crashes over the outage window, losing
+              its queue, in-flight batch, and KV cache; ICC's
+              health-aware routing fails over to the RAN nodes while
+              mec_only keeps dispatching into the hole (bounded retries,
+              then ``node_failure`` drops)
+  backhaul    every gNB->MEC wireline goes down for the same window
+              (store-and-forward: transfers buffer at the gNB and deliver
+              at recovery); ICC keeps jobs RAN-local, mec_only pays the
+              full outage on every job
+
+The headline reads off, at a reference rate, how much Def.-1 satisfaction
+each stance *retains* under each fault (fault / baseline) and the
+outage-window minimum of the windowed satisfaction — the transient
+collapse a rate-averaged score would smear out.
+
+Outputs:
+  benchmarks/results/resilience.json   full curves + per-case survivability
+  BENCH_resilience.json (repo root)    tracked baseline: headline numbers +
+                                       the ExperimentResult payload
+                                       (validate-bench checks its schema)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict, Optional, Sequence
+
+from repro.experiments import (
+    SCHEMA_VERSION,
+    resilience_spec,
+    run as run_experiment,
+)
+from repro.experiments.registry import (
+    RESILIENCE_ARMS,
+    RESILIENCE_FAULT_CASES,
+)
+
+
+def empty_faultspec_identity_check() -> int:
+    """The opt-in contract as a CI gate: ``faults=None`` and an empty
+    ``FaultSpec()`` must produce bit-identical fixed-seed results (the
+    fault machinery must be provably absent when nothing is injected).
+    Returns 0 on identity, 1 on divergence."""
+    import dataclasses
+
+    from repro.faults import FaultSpec
+    from repro.network import SCENARIOS, config_for_load, three_cell_hetero
+    from repro.network.simulator import simulate_network
+
+    cfg = config_for_load(
+        three_cell_hetero(), SCENARIOS["ar_translation"], 40.0,
+        sim_time=4.0, warmup=1.0, seed=0,
+    )
+    for policy in ("slack_aware", "mec_only"):
+        off = simulate_network(cfg, policy)
+        empty = simulate_network(
+            dataclasses.replace(cfg, faults=FaultSpec()), policy
+        )
+        if off != empty:
+            print(f"[resilience] FAIL: empty FaultSpec diverged from "
+                  f"faults=None under {policy} (opt-in contract broken)")
+            return 1
+    print("[resilience] faults-off bit-identity: "
+          "empty FaultSpec() == faults=None")
+    return 0
+
+
+def _outage_min_sat(windows, t_fail: float, t_recover: float):
+    """Minimum windowed satisfaction over windows overlapping the outage
+    (None when no outage window scored any jobs)."""
+    if not windows:
+        return None
+    vals = [
+        w["satisfaction"] for w in windows
+        if w["t1"] > t_fail and w["t0"] < t_recover
+        and w.get("satisfaction") is not None
+    ]
+    return min(vals) if vals else None
+
+
+def run(
+    out_dir: str = "benchmarks/results",
+    results_name: str = "resilience.json",
+    bench_path: str = "BENCH_resilience.json",
+    rates: Optional[Sequence[float]] = None,
+    sim_time: float = 8.0,
+    warmup: float = 1.0,
+    n_seeds: int = 2,
+    t_fail: float = 3.0,
+    t_recover: float = 6.0,
+    alpha: float = 0.95,
+    ref_rate: float = 70.0,
+    name: str = "resilience",
+    workers: int = 0,
+) -> dict:
+    spec = resilience_spec(
+        rates=rates, sim_time=sim_time, warmup=warmup, n_seeds=n_seeds,
+        t_fail=t_fail, t_recover=t_recover, alpha=alpha, name=name,
+    )
+    grid = [float(r) for r in spec.sweep.rates]
+    # headline readings anchor at the grid rate closest to `ref_rate`
+    ref = min(grid, key=lambda r: abs(r - ref_rate))
+
+    result = run_experiment(spec, workers=workers)
+
+    out: dict = {
+        "rates": grid,
+        "alpha": alpha,
+        "sim_time": sim_time,
+        "outage": [t_fail, t_recover],
+        "n_seeds": n_seeds,
+        "ref_rate": ref,
+        "topology": "three_cell_hetero",
+        "arms": {},
+    }
+    sat_at_ref: Dict[str, float] = {}
+    min_win: Dict[str, Optional[float]] = {}
+    for arm in result.arms:
+        c = arm.curve
+        out["arms"][arm.name] = {
+            "satisfaction": [round(s, 4) for s in c.satisfaction],
+            "capacity": c.capacity,
+            "saturated": c.saturated,
+        }
+        point = next(p for p in arm.points if p.rate == ref)
+        sat_at_ref[arm.name] = point.mean.satisfaction
+        min_win[arm.name] = _outage_min_sat(
+            point.mean.windows, t_fail, t_recover
+        )
+        mark = ">=" if c.saturated else "  "
+        print(f"[resilience] {arm.name:15s} capacity{mark}{c.capacity:6.1f} "
+              f"jobs/s  sat@{ref:.0f}={sat_at_ref[arm.name]:.3f}  "
+              f"outage-min={min_win[arm.name]}")
+
+    # survivability: fraction of baseline satisfaction retained under each
+    # fault, per stance, at the reference rate
+    retained: Dict[str, Dict[str, float]] = {}
+    for stance in RESILIENCE_ARMS:
+        base = max(sat_at_ref[f"{stance}/baseline"], 1e-9)
+        retained[stance] = {
+            case: round(sat_at_ref[f"{stance}/{case}"] / base, 4)
+            for case in RESILIENCE_FAULT_CASES if case != "baseline"
+        }
+    out["retained_at_ref"] = retained
+    out["sat_at_ref"] = {k: round(v, 4) for k, v in sat_at_ref.items()}
+    out["outage_min_window_sat"] = {
+        k: (round(v, 4) if v is not None else None)
+        for k, v in min_win.items()
+    }
+    # the one-number claim: ICC's worst-case retained satisfaction minus
+    # the centralized baseline's, across the injected faults
+    icc_worst = min(retained["icc"].values())
+    mec_worst = min(retained["mec"].values())
+    out["icc_vs_mec_worst_retained"] = round(icc_worst - mec_worst, 4)
+    out["sweep_wall_clock_s"] = result.wall_clock_s
+
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, results_name), "w") as f:
+        json.dump(out, f, indent=1)
+    headline = {
+        "capacity_per_arm": {
+            a: out["arms"][a]["capacity"] for a in out["arms"]
+        },
+        "saturated": {a: out["arms"][a]["saturated"] for a in out["arms"]},
+        "sat_at_ref": out["sat_at_ref"],
+        "retained_at_ref": retained,
+        "outage_min_window_sat": out["outage_min_window_sat"],
+        "icc_vs_mec_worst_retained": out["icc_vs_mec_worst_retained"],
+        "ref_rate": ref,
+        "outage": [t_fail, t_recover],
+        "rates": grid,
+        "sim_time": sim_time,
+        "n_seeds": n_seeds,
+        "sweep_wall_clock_s": out["sweep_wall_clock_s"],
+    }
+    baseline = {
+        "schema_version": SCHEMA_VERSION,
+        "experiment": spec.name,
+        "headline": headline,
+        "result": result.to_dict(points="none"),
+    }
+    with open(bench_path, "w") as f:
+        json.dump(baseline, f, indent=1, sort_keys=True)
+    print(f"[resilience] icc worst-case retains {icc_worst:.1%} vs "
+          f"mec {mec_worst:.1%} (delta {out['icc_vs_mec_worst_retained']:+.1%})"
+          f"  (sweep {out['sweep_wall_clock_s']:.0f}s)")
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--workers", type=int, default=-1,
+                    help="sweep processes (-1 = one per CPU, 1 = serial)")
+    ap.add_argument("--seeds", type=int, default=None,
+                    help="override n_seeds for the survivability sweep")
+    args = ap.parse_args()
+    kw = {"workers": args.workers}
+    if args.seeds is not None:
+        kw["n_seeds"] = args.seeds
+    run(**kw)

@@ -15,7 +15,11 @@ absorb runner noise) fails the run. Quick mode also runs the telemetry
 gate: one controlled flash-crowd pass untraced and one under an
 `EventRecorder` — results must be bit-identical, the traced run must stay
 within 2x untraced, and its Chrome trace is written to
-``benchmarks/results/trace_quick.json`` (the CI trace artifact). Finally
+``benchmarks/results/trace_quick.json`` (the CI trace artifact). The
+resilience gate drives the registered ``resilience_quick`` survivability
+grid into ``benchmarks/results/BENCH_resilience_quick.json`` and asserts
+the fault-injection opt-in contract (an empty ``FaultSpec()`` is
+bit-identical to ``faults=None``). Finally
 the report gate renders the quick network sweep into
 ``benchmarks/results/report_quick.md`` and re-renders every tracked
 ``BENCH_*.json`` baseline twice, failing on any render error or
@@ -266,6 +270,32 @@ def main(quick: bool = False, workers: int = -1) -> int:
                  rc["headline"]["joint_vs_best_static_spike"],
                  f"joint controller vs {rc['best_static']}"))
 
+    from . import resilience
+
+    # reduced survivability pass; the tracked BENCH_resilience.json baseline
+    # comes from the full `python -m benchmarks.resilience` run. Quick mode
+    # drives the exact registered `resilience_quick` grid (pinned against
+    # the registry in tests/test_experiments.py).
+    res_kw = dict(rates=(40.0, 100.0), sim_time=6.0, n_seeds=1,
+                  t_fail=2.0, t_recover=4.5, name="resilience_quick")
+    if not quick:
+        res_kw["rates"] = (40.0, 70.0, 100.0, 130.0)
+    t0 = time.perf_counter()
+    rr = resilience.run(
+        results_name="resilience_quick.json",
+        bench_path="benchmarks/results/BENCH_resilience_quick.json",
+        workers=workers, **res_kw,
+    )
+    timings["resilience_quick_s"] = round(time.perf_counter() - t0, 2)
+    for stance in ("icc", "mec"):
+        for case, frac in sorted(rr["retained_at_ref"][stance].items()):
+            rows.append((f"resilience.{stance}_retained_{case}", frac,
+                         f"Def-1 sat retained @ {rr['ref_rate']:.0f}/s "
+                         "(fault / baseline)"))
+    rows.append(("resilience.icc_vs_mec_worst_retained",
+                 rr["icc_vs_mec_worst_retained"],
+                 "ICC worst-case retention minus MEC-only's"))
+
     r7 = fig7_gpu_scaling.run(gpu_counts=range(4, 15, 2), sim_time=sim_time,
                               n_seeds=2, workers=workers)
     rows.append(("fig7.min_gpus_icc", r7["min_gpus"].get("icc"), "paper: 8"))
@@ -297,6 +327,9 @@ def main(quick: bool = False, workers: int = -1) -> int:
         print(f"{name},{value},{derived}")
 
     if quick:
+        # the fault machinery must be provably absent when nothing is
+        # injected: empty FaultSpec() == faults=None, bit for bit
+        fid = resilience.empty_faultspec_identity_check()
         trc = _telemetry_overhead_check(timings)
         rc = _check_perf_quick(timings)
         # the tracked BENCH_* baselines must keep parsing against the
@@ -309,7 +342,7 @@ def main(quick: bool = False, workers: int = -1) -> int:
         if not problems:
             print("[validate-bench] tracked baselines OK")
         rep = _report_smoke()
-        return trc or rc or rep or (1 if problems else 0)
+        return fid or trc or rc or rep or (1 if problems else 0)
     return 0
 
 

@@ -59,6 +59,7 @@ class BatchStats:
     peak_kv_bytes: float = 0.0
     kv_blocked_iterations: int = 0  # slot open but head job's KV didn't fit
     preempted: int = 0  # running jobs dropped mid-generation
+    kv_requeues: int = 0  # head sent to the back of the queue (kv_requeue)
 
     def avg_batch(self) -> float:
         return self.decode_token_iterations / max(self.n_iterations, 1)
@@ -89,11 +90,15 @@ class BatchedComputeNode:
         chunked_prefill: bool = True,
         prefill_chunk: int = 256,
         kv_cache: Optional[KVCache] = None,
+        kv_requeue: bool = False,
+        kv_requeue_max: int = 3,
     ):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
         if chunked_prefill and prefill_chunk < 1:
             raise ValueError("prefill_chunk must be >= 1 when chunking")
+        if kv_requeue_max < 0:
+            raise ValueError("kv_requeue_max must be >= 0")
         self.lm = lm
         self.max_batch = max_batch
         self.policy = policy
@@ -101,6 +106,14 @@ class BatchedComputeNode:
         self.comp_budget = comp_budget
         self.chunked_prefill = chunked_prefill
         self.prefill_chunk = prefill_chunk
+        # Opt-in relief for head-of-line KV blocking: a head job whose
+        # reservation doesn't fit *right now* is re-queued to the back
+        # (bounded times, deadline-aware give-up -> kv_reject) instead of
+        # stalling admission. Default off: tracked baselines and the
+        # bit-identity pins exercise the strict head-of-line discipline.
+        self.kv_requeue = kv_requeue
+        self.kv_requeue_max = kv_requeue_max
+        self._requeues: dict[int, int] = {}  # id(job) -> requeue count
         self.kv = kv_cache if kv_cache is not None else KVCache(lm.hw, lm.model)
         self._heap: List[Tuple[float, int, Job]] = []
         self._seq = itertools.count()
@@ -114,6 +127,9 @@ class BatchedComputeNode:
         # here; every event site is behind a single None-check
         self.recorder = None
         self.telemetry_name = "node"
+        # fault injection (repro.faults): optional brownout hook mapping
+        # iteration start time -> latency multiplier; None = nominal speed
+        self.speed_scale = None
 
     # ------------------------------------------------------------- protocol
     def __len__(self) -> int:
@@ -188,6 +204,7 @@ class BatchedComputeNode:
     def _admit(self, t: float) -> None:
         """Move queue heads into the batch while slots + KV allow (at time t)."""
         rec = self.recorder
+        requeued_now: set = set()  # ids sent to the back during this call
         while self._heap and len(self._running) < self.max_batch:
             _, _, job = self._heap[0]
             if job.t_compute_arrival > t:
@@ -196,6 +213,7 @@ class BatchedComputeNode:
             if self.drop_infeasible and t + svc > self._drop_horizon(job):
                 heapq.heappop(self._heap)
                 self._waiting_work = max(self._waiting_work - svc, 0.0)
+                self._requeues.pop(id(job), None)
                 job.dropped = True
                 job.drop_reason = "queue_drop"
                 self.dropped.append(job)
@@ -216,12 +234,37 @@ class BatchedComputeNode:
                                       stage="kv_unservable",
                                       reason="kv_reject")
                     continue
+                if self.kv_requeue and id(job) not in requeued_now:
+                    n = self._requeues.get(id(job), 0)
+                    if n >= self.kv_requeue_max or t >= self._drop_horizon(job):
+                        # waited long enough (bounded retries, or the drop
+                        # horizon already passed): give up as a KV reject
+                        heapq.heappop(self._heap)
+                        self._waiting_work = max(self._waiting_work - svc, 0.0)
+                        self._requeues.pop(id(job), None)
+                        job.dropped = True
+                        job.drop_reason = "kv_reject"
+                        self.dropped.append(job)
+                        if rec is not None:
+                            rec.job_event("drop", job.uid, t,
+                                          stage="kv_wait", reason="kv_reject")
+                        continue
+                    # send the head to the back so later arrivals with
+                    # smaller reservations can use the open slot
+                    heapq.heappop(self._heap)
+                    key = t if self.policy == "fifo" else job.priority
+                    heapq.heappush(self._heap, (key, next(self._seq), job))
+                    self._requeues[id(job)] = n + 1
+                    requeued_now.add(id(job))
+                    self.stats.kv_requeues += 1
+                    continue
                 # Head-of-line blocking by design: admission is strictly in
                 # queue order, the cache is the binding resource.
                 self.stats.kv_blocked_iterations += 1
                 break
             heapq.heappop(self._heap)
             self._waiting_work = max(self._waiting_work - svc, 0.0)
+            self._requeues.pop(id(job), None)
             self.kv.admit(job)
             self._running.append(_Running(job))
             if rec is not None:
@@ -297,6 +340,8 @@ class BatchedComputeNode:
             if prefiller is not None:
                 context += prefiller.prefilled
             dt = self.lm.iteration_latency(chunk, len(decode), context)
+            if self.speed_scale is not None:
+                dt *= self.speed_scale(t)
             t_end = t + dt
             self.busy_until = t_end
 
@@ -341,3 +386,36 @@ class BatchedComputeNode:
                 self.completed.append(r.job)
                 if rec is not None:
                     rec.job_event("complete", r.job.uid, t_end)
+
+    def crash(self, t: float, t_recover: float) -> List[Job]:
+        """Node failure at ``t``: lose queue, in-flight batch, KV cache.
+
+        Caller must ``run_until(t)`` first. Jobs whose completion the
+        iteration loop had already booked beyond ``t`` are un-completed
+        (the iteration they rode never finished); resident sequences
+        lose their KV reservation and all generated tokens. Returns the
+        affected jobs for the driver to drop (``node_failure``) or
+        re-dispatch — a re-dispatched job re-enters as a fresh sequence
+        and pays full re-prefill. The node stays unavailable until
+        ``t_recover``.
+        """
+        affected: List[Job] = []
+        # completions are booked at iteration end, which can lie past the
+        # last run_until horizon — those iterations never actually ran
+        while self.completed and self.completed[-1].t_complete > t:
+            job = self.completed.pop()
+            job.t_complete = float("nan")
+            job.t_first_token = float("nan")
+            affected.append(job)
+        for r in self._running:
+            self.kv.release(r.job)
+            r.job.t_first_token = float("nan")
+            affected.append(r.job)
+        self._running = []
+        while self._heap:
+            _, _, job = heapq.heappop(self._heap)
+            affected.append(job)
+        self._waiting_work = 0.0
+        self._requeues.clear()
+        self.busy_until = max(t_recover, t)
+        return affected

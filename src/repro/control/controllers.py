@@ -64,6 +64,10 @@ class NodeObs:
     queue_depth: int
     est_wait_s: float  # estimated_free_at(now) - now
     in_transit: int  # routed, still on the wireline
+    # node health (repro.faults): True while the node is crashed; fault-free
+    # runs always observe False, so controllers branching on it stay
+    # bit-identical when no fault schedule is bound
+    down: bool = False
 
 
 @dataclasses.dataclass
@@ -202,10 +206,20 @@ class SlackAwareJointController(Controller):
             for n in obs.nodes
         }
         bias = {name: self.bias_gamma * w for name, w in waits.items()}
+        for n in obs.nodes:
+            if n.down:
+                # shed load off a crashed node outright: its est_wait
+                # already spans the outage, the extra bias makes the
+                # retarget unconditional rather than marginal
+                bias[n.name] = bias.get(n.name, 0.0) + 10.0 * obs.b_total
 
         comm_floor = max(c.comm_floor_s for c in obs.cells)
         slack = max(obs.b_total - comm_floor, 1e-3)
-        fleet_rate = sum(1.0 / obs.svc_s[n.name] for n in obs.nodes)
+        # a crashed node contributes no throughput while it is down, so
+        # the admission quota provisions for the surviving fleet only
+        fleet_rate = sum(
+            1.0 / obs.svc_s[n.name] for n in obs.nodes if not n.down
+        )
         demand = max(sum(c.generated for c in obs.cells), 1)
         quota: Optional[Dict[int, float]] = None
         for c in obs.cells:
@@ -256,11 +270,14 @@ def control_epoch(
     node_items: Sequence[Tuple[str, object, int]],
     svc_s: Dict[str, float],
     recorder=None,
+    down_nodes=None,
 ) -> Actions:
     """One control-loop turn: advance the nodes to `now` (observations must
     not lag the slot clock across a fast-forward), build the Observation,
     evaluate the controller, apply its Actions to the `ControlState` and
     the engines' channels. `node_items` is ``(name, node, in_transit)``.
+    `down_nodes` (a set of node names, from the driver's fault schedule)
+    marks crashed nodes in the observation; None = all healthy.
 
     `recorder` (an *active* `repro.telemetry` recorder, or None) gets one
     epoch record per turn: the Observation numbers and the Actions taken
@@ -286,6 +303,7 @@ def control_epoch(
             queue_depth=len(node),
             est_wait_s=node.estimated_free_at(now) - now,
             in_transit=in_transit,
+            down=(down_nodes is not None and name in down_nodes),
         )
         for name, node, in_transit in node_items
     ]
@@ -335,6 +353,7 @@ def control_epoch(
                     "queue_depth": nb.queue_depth,
                     "est_wait_s": fin(nb.est_wait_s),
                     "in_transit": nb.in_transit,
+                    "down": nb.down,
                 }
                 for nb in nodes
             ],

@@ -15,6 +15,11 @@ callable and every argument must be picklable — module-level functions,
 over local state only work serially. On platforms where worker processes
 cannot be spawned (sandboxes), `parallel_map` degrades to the serial path
 with a warning rather than failing the sweep.
+
+Resilient mode (``task_timeout_s=``) hardens long sweeps for CI: each task
+gets a per-attempt wall-clock budget and bounded retries, and a point that
+keeps timing out or raising yields a structured `TaskError` in its result
+slot instead of hanging the pipeline or aborting the grid.
 """
 
 from __future__ import annotations
@@ -22,10 +27,14 @@ from __future__ import annotations
 import logging
 import os
 from concurrent.futures import ProcessPoolExecutor
+from concurrent.futures import TimeoutError as FuturesTimeoutError
 from concurrent.futures.process import BrokenProcessPool
+from dataclasses import dataclass
 from typing import Callable, List, Optional, Sequence, Tuple, Union
 
-__all__ = ["resolve_workers", "resolve_chunk", "parallel_map"]
+__all__ = [
+    "resolve_workers", "resolve_chunk", "parallel_map", "TaskError",
+]
 
 # package logger: sweeps/tests capture or silence diagnostics via the
 # standard logging tree ("repro" and children) instead of scraping stderr
@@ -52,6 +61,38 @@ def _run_chunk(fn: Callable, chunk: Sequence[Tuple]) -> List:
     return [fn(*t) for t in chunk]
 
 
+@dataclass(frozen=True)
+class TaskError:
+    """Structured failure marker for one grid point (resilient mode).
+
+    Occupies the failed task's slot in the `parallel_map` result list so a
+    sweep returns every point it *could* compute instead of hanging CI on
+    one pathological simulation or aborting the whole grid on one raised
+    exception. Picklable; aggregators skip it (`isinstance` check).
+
+      error     exception class name, or ``"timeout"``
+      message   ``str(exc)``, or a description of the timeout
+      attempts  how many times the task was tried before giving up
+    """
+
+    task_index: int
+    error: str
+    message: str
+    attempts: int
+
+
+def _attempt_serial(fn: Callable, task: Tuple, idx: int, tries: int):
+    """Run one task in-process with retry + error capture (no timeout:
+    without a worker process there is nothing safe to interrupt)."""
+    last: Optional[BaseException] = None
+    for _ in range(max(1, tries)):
+        try:
+            return fn(*task)
+        except Exception as exc:  # captured, not raised: resilient mode
+            last = exc
+    return TaskError(idx, type(last).__name__, str(last), max(1, tries))
+
+
 def resolve_chunk(
     chunk: Union[int, str, None], n_tasks: int, n_workers: int
 ) -> int:
@@ -74,6 +115,8 @@ def parallel_map(
     tasks: Sequence[Tuple],
     workers: Union[int, str, None] = 0,
     chunk: Union[int, str, None] = None,
+    task_timeout_s: Optional[float] = None,
+    task_retries: int = 2,
 ) -> List:
     """``[fn(*t) for t in tasks]`` across `workers` processes, order kept.
 
@@ -82,10 +125,27 @@ def parallel_map(
     multiple tasks per worker dispatch (default: auto-sized, ~4 dispatches
     per worker) — a pure dispatch-granularity knob, every task still runs
     `fn(*t)` with its own arguments in submission order.
+
+    **Resilient mode** (``task_timeout_s`` set): each task is dispatched
+    individually (chunking is bypassed) and given `task_timeout_s` seconds
+    of wall clock per attempt and `task_retries` total attempts; a task
+    that times out or raises on every attempt yields a `TaskError` in its
+    result slot instead of hanging/aborting the sweep. A worker stuck past
+    the final timeout is abandoned (its process is terminated at pool
+    teardown). Serially (``workers<=1``) the timeout cannot be enforced —
+    exceptions are still captured and retried.
     """
+    if task_retries < 1:
+        raise ValueError(f"task_retries must be >= 1, got {task_retries}")
     n = resolve_workers(workers)
+    resilient = task_timeout_s is not None
     if n <= 1 or len(tasks) <= 1:
+        if resilient:
+            return [_attempt_serial(fn, t, i, task_retries)
+                    for i, t in enumerate(tasks)]
         return [fn(*t) for t in tasks]
+    if resilient:
+        return _resilient_map(fn, tasks, n, task_timeout_s, task_retries)
     size = resolve_chunk(chunk, len(tasks), n)
     groups = [tasks[i:i + size] for i in range(0, len(tasks), size)]
     try:
@@ -99,3 +159,77 @@ def parallel_map(
             "process pool unavailable (%s); running serially", exc
         )
         return [fn(*t) for t in tasks]
+
+
+def _resilient_map(
+    fn: Callable,
+    tasks: Sequence[Tuple],
+    n_workers: int,
+    timeout_s: float,
+    tries: int,
+) -> List:
+    """Per-task dispatch with timeout + retry + structured error capture.
+
+    Futures are drained in task order; `timeout_s` bounds the wait on each
+    (tasks running concurrently behind the head of line get their run time
+    counted while earlier results are awaited, so the cap is per-attempt
+    wall clock, not cumulative). On a final timeout the worker is left
+    running and its process group is terminated at teardown so neither the
+    sweep nor interpreter exit blocks on it.
+    """
+    results: List = [None] * len(tasks)
+    pool = ProcessPoolExecutor(max_workers=min(n_workers, len(tasks)))
+    abandoned = False
+    try:
+        futures = {i: pool.submit(fn, *tasks[i]) for i in range(len(tasks))}
+        attempts = dict.fromkeys(futures, 1)
+        for i in range(len(tasks)):
+            while True:
+                try:
+                    results[i] = futures[i].result(timeout=timeout_s)
+                    break
+                except FuturesTimeoutError:
+                    futures[i].cancel()
+                    if attempts[i] < tries:
+                        attempts[i] += 1
+                        futures[i] = pool.submit(fn, *tasks[i])
+                        continue
+                    abandoned = True
+                    results[i] = TaskError(
+                        i, "timeout",
+                        f"task exceeded {timeout_s}s per attempt "
+                        f"({attempts[i]} attempts)",
+                        attempts[i],
+                    )
+                    break
+                except BrokenProcessPool:
+                    raise
+                except Exception as exc:
+                    if attempts[i] < tries:
+                        attempts[i] += 1
+                        futures[i] = pool.submit(fn, *tasks[i])
+                        continue
+                    results[i] = TaskError(
+                        i, type(exc).__name__, str(exc), attempts[i]
+                    )
+                    break
+        return results
+    except (OSError, PermissionError, BrokenProcessPool) as exc:
+        logger.warning(
+            "process pool unavailable (%s); running serially", exc
+        )
+        abandoned = True  # don't wait on whatever state the pool is in
+        return [_attempt_serial(fn, t, i, tries)
+                for i, t in enumerate(tasks)]
+    finally:
+        if abandoned:
+            # a worker may be wedged mid-task: kill outstanding processes
+            # so shutdown (and interpreter exit) cannot hang on them
+            for proc in list(getattr(pool, "_processes", {}).values()):
+                try:
+                    proc.terminate()
+                except Exception:
+                    pass
+            pool.shutdown(wait=False, cancel_futures=True)
+        else:
+            pool.shutdown(wait=True)

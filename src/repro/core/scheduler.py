@@ -56,6 +56,7 @@ class Job:
     #   deadline_preempt  running job preempted mid-generation (batched)
     #   kv_reject         KV reservation can never fit the cache
     #   quota             admission controller rejected at generation
+    #   node_failure      lost to a node crash / undeliverable while down
     # None for completed jobs and for jobs still in-system at sim end
     # (score_jobs books those as "unfinished")
     drop_reason: Optional[str] = None
@@ -147,6 +148,10 @@ class ComputeNode:
         # so instrumentation costs one None-check when tracing is off
         self.recorder = None
         self.telemetry_name = "node"
+        # fault injection (repro.faults): optional brownout hook mapping
+        # dispatch time -> service-time multiplier; None = nominal speed
+        # (guard keeps the fault-free path bit-identical by construction)
+        self.speed_scale: Optional[Callable[[float], float]] = None
 
     def __len__(self) -> int:
         return len(self._heap)
@@ -210,6 +215,8 @@ class ComputeNode:
                 self._queued_work = max(self._queued_work - svc, 0.0)
             else:
                 svc = self.service_time(job)
+            if self.speed_scale is not None:
+                svc *= self.speed_scale(start)
             if self.drop_infeasible and start + svc > self._drop_horizon(job):
                 job.dropped = True
                 job.drop_reason = "queue_drop"
@@ -226,3 +233,28 @@ class ComputeNode:
                 # dispatch (the recorder attributes `svc` to `decode`)
                 rec.job_event("dispatch", job.uid, start, svc=svc)
                 rec.job_event("complete", job.uid, job.t_complete)
+
+    def crash(self, t: float, t_recover: float) -> List[Job]:
+        """Node failure at ``t``: lose the queue and the in-service job.
+
+        Caller must ``run_until(t)`` first. Returns the affected jobs
+        (queued plus the at-most-one job whose completion lay beyond
+        ``t``) for the driver to drop with reason ``node_failure`` or
+        re-dispatch via routing; the node stays unavailable until
+        ``t_recover`` (``busy_until`` pins there).
+        """
+        affected: List[Job] = []
+        # the non-preemptive loop completes jobs eagerly, so at most one
+        # entry in `completed` can still lie in the future at time t —
+        # that is the in-service job the crash kills mid-inference
+        while self.completed and self.completed[-1].t_complete > t:
+            job = self.completed.pop()
+            job.t_complete = float("nan")
+            affected.append(job)
+        while self._heap:
+            _, _, job = heapq.heappop(self._heap)
+            affected.append(job)
+        self._svc_cache.clear()
+        self._queued_work = 0.0
+        self.busy_until = max(t_recover, t)
+        return affected

@@ -665,6 +665,7 @@ def simulate(
     fast: bool = True,
     controller: "Optional[ControllerLike]" = None,
     recorder=None,
+    faults=None,
 ) -> SimResult:
     """Run one slot-stepped simulation and score Def.-1 satisfaction.
 
@@ -686,6 +687,14 @@ def simulate(
     an `EventRecorder`'s columnar export is attached as
     ``result.telemetry``. The default (None / NullRecorder) is free: traced
     and untraced runs are bit-identical apart from the attachment.
+
+    `faults` (a `repro.faults.FaultSpec`) injects node crashes and
+    brownouts on a seeded, slot-snapped timeline: a crash loses the
+    queue and the in-flight work, and the affected jobs are re-submitted
+    (served from scratch after recovery) or dropped with reason
+    ``node_failure`` per the spec's ``redispatch`` knob. Link faults
+    need the multi-cell simulator. None / an empty spec is free —
+    fixed-seed results stay bit-identical to the fault-free engine.
 
     ``fast=False`` selects the reference draw-per-slot engine (identical
     fixed-seed results, ~4x slower; kept for equivalence testing).
@@ -724,6 +733,54 @@ def simulate(
         recorder=rec,
     )
     s, n_slots = 0, engine.n_slots
+    # ---------------------------------------------------- fault injection
+    # Opt-in (sched stays None otherwise — the loop below is untouched).
+    sched = None
+    fevents: collections.deque = collections.deque()
+    if faults is not None and not faults.empty:
+        if faults.link_outages:
+            raise ValueError(
+                "link faults need the multi-cell simulator "
+                "(repro.network.simulate_network)")
+        from ..faults import bind_faults
+        from ..faults.schedule import NODE_FAIL
+
+        sched = bind_faults(faults, engine.slot, sim.sim_time, sim.seed)
+        if sched.has_brownouts():
+            node.speed_scale = lambda t: sched.slow_factor(None, t)
+        # (slot, t, kind, name): slot-snapped instants, time-sorted
+        fevents = collections.deque(
+            (int(round(t / engine.slot)), t, kind, name)
+            for t, kind, name in sched.node_events()
+        )
+
+        def fault_event(t_ev: float, kind: str, name: str) -> None:
+            if kind == NODE_FAIL:
+                node.run_until(t_ev)
+                until = sched.down_until(None, t_ev) or t_ev
+                affected = node.crash(t_ev, until)
+                fe = getattr(rec, "fault_event", None)
+                if fe is not None:
+                    fe(t_ev, kind, name, n_affected=len(affected))
+                for job in affected:
+                    if sched.redispatch:
+                        # single node: re-queue here; service restarts
+                        # from scratch once the node recovers
+                        if rec is not None:
+                            rec.job_event("redispatch", job.uid, t_ev,
+                                          route="node")
+                        node.submit(job)
+                    else:
+                        job.dropped = True
+                        job.drop_reason = "node_failure"
+                        if rec is not None:
+                            rec.job_event("drop", job.uid, t_ev,
+                                          stage="node",
+                                          reason="node_failure")
+            else:
+                fe = getattr(rec, "fault_event", None)
+                if fe is not None:
+                    fe(t_ev, kind, name)
     sample_stride = next_sample = 0
     if rec is not None:
         node.recorder = rec
@@ -747,10 +804,18 @@ def simulate(
             )
         svc_s = {"node": svc / max(getattr(node, "max_batch", 1), 1)}
     while s < n_slots:
+        while fevents and fevents[0][0] <= s:
+            _, t_ev, kind, name = fevents.popleft()
+            fault_event(t_ev, kind, name)
         if ctl is not None and s >= next_epoch:
+            now_ep = s * engine.slot
             control_epoch(
-                ctl, state, s * engine.slot, sim.b_total, [engine],
+                ctl, state, now_ep, sim.b_total, [engine],
                 [("node", node, 0)], svc_s, recorder=rec,
+                down_nodes=(
+                    {"node"} if sched is not None
+                    and sched.node_down(None, now_ep) else None
+                ),
             )
             next_epoch += epoch_slots
         if engine.can_skip():
@@ -762,6 +827,10 @@ def simulate(
             # queue-depth series to cover those spans). Results are
             # unaffected: skipping is a pure performance path.
             nxt = engine.next_event_at_or_after(s)
+            if fevents:
+                # never skip over a crash/recover instant: the crash must
+                # execute at its scheduled slot, not late
+                nxt = min(nxt, fevents[0][0])
             if ctl is not None:
                 nxt = min(nxt, next_epoch)
             if rec is not None:
@@ -784,6 +853,9 @@ def simulate(
             )
             next_sample = s + sample_stride
         s += 1
+    while fevents:  # recoveries snapped past the last slot (telemetry)
+        _, t_ev, kind, name = fevents.popleft()
+        fault_event(t_ev, kind, name)
     node.run_until(float("inf"))
     result = score_jobs(
         engine.jobs,

@@ -31,6 +31,7 @@ from .registry import (
     network_capacity_spec,
     network_scenarios_spec,
     register_experiment,
+    resilience_spec,
 )
 from .result import (
     ArmResult,
@@ -76,5 +77,6 @@ __all__ = [
     "network_scenarios_spec",
     "batching_capacity_spec",
     "control_capacity_spec",
+    "resilience_spec",
     "validate_bench",
 ]

@@ -23,6 +23,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 from ..control import MobilityConfig
 from ..core.simulator import SchemeConfig
+from ..faults import FaultSpec, LinkOutage, NodeOutage
 from ..network.routing import POLICIES
 from .spec import (
     ControlSpec,
@@ -41,8 +42,11 @@ __all__ = [
     "network_scenarios_spec",
     "batching_capacity_spec",
     "control_capacity_spec",
+    "resilience_spec",
     "CONTROL_ARMS",
     "CONTROL_STATIC_ARMS",
+    "RESILIENCE_ARMS",
+    "RESILIENCE_FAULT_CASES",
 ]
 
 _EXPERIMENTS: Dict[str, ExperimentSpec] = {}
@@ -296,6 +300,96 @@ def control_capacity_spec(
     )
 
 
+# survivability arm name -> routing policy: the ICC-native distributed
+# stance vs the centralized 5G-MEC baseline (deliberately health-blind)
+RESILIENCE_ARMS: Dict[str, str] = {
+    "icc": "slack_aware",
+    "mec": "mec_only",
+}
+# fault case names swept per arm; the windows are parameters of
+# `resilience_spec` so reduced grids shift them with the horizon
+RESILIENCE_FAULT_CASES = ("baseline", "node_crash", "backhaul")
+RESILIENCE_WINDOW_S = 1.0
+
+
+def resilience_spec(
+    rates: Optional[Sequence[float]] = None,
+    sim_time: float = 8.0,
+    warmup: float = 1.0,
+    n_seeds: int = 2,
+    t_fail: float = 3.0,
+    t_recover: float = 6.0,
+    alpha: float = 0.95,
+    name: str = "resilience",
+) -> ExperimentSpec:
+    """ICC-vs-MEC survivability grid (the BENCH_resilience.json study).
+
+    {icc=slack_aware, mec=mec_only} x {baseline, node_crash, backhaul} on
+    the 3-cell hetero fleet. Both fault cases target the MEC tier — the
+    centralized baseline's single point of failure:
+
+      node_crash  the pooled MEC compute node crashes over
+                  [t_fail, t_recover): queue, in-flight batch, and KV
+                  cache are lost; health-aware ICC routing fails over to
+                  the RAN nodes, mec_only keeps dispatching into the hole
+      backhaul    every gNB->MEC wireline goes down for the same window
+                  (store-and-forward: queued transfers deliver at
+                  recovery); ICC keeps jobs RAN-local, mec_only pays the
+                  full outage on every job
+
+    The baseline case carries an explicit empty `FaultSpec()` — by the
+    opt-in contract it is bit-identical to ``faults=None``, so the
+    fault-free curves double as a standing regression check of that
+    contract (asserted by the CI quick gate).
+
+    Windowed Def.-1 (``window_s=1.0``) exposes the outage-window
+    satisfaction collapse that rate-averaged scoring would smear out.
+    """
+    if not warmup < t_fail < t_recover < sim_time:
+        raise ValueError(
+            f"need warmup < t_fail < t_recover < sim_time, got "
+            f"{warmup}/{t_fail}/{t_recover}/{sim_time}"
+        )
+    system = SystemSpec(kind="multi_cell", topology="three_cell_hetero")
+    cases: Dict[str, FaultSpec] = {
+        "baseline": FaultSpec(),
+        "node_crash": FaultSpec(
+            node_outages=(NodeOutage("mec", t_fail, t_recover),)
+        ),
+        "backhaul": FaultSpec(
+            link_outages=(LinkOutage(t_fail=t_fail, t_recover=t_recover,
+                                     node="mec"),)
+        ),
+    }
+    assert tuple(cases) == RESILIENCE_FAULT_CASES
+    return ExperimentSpec(
+        name=name,
+        description=(
+            "ICC vs MEC-only survivability under a MEC node crash and a "
+            "backhaul outage (windowed Def.-1, 3-cell hetero fleet)"
+        ),
+        workload=WorkloadSpec(scenario="ar_translation"),
+        system=system,
+        sweep=SweepSpec(
+            rates=tuple(float(r) for r in (rates or range(30, 191, 20))),
+            n_seeds=n_seeds,
+            sim_time=sim_time,
+            warmup=warmup,
+            alpha=alpha,
+            window_s=RESILIENCE_WINDOW_S,
+        ),
+        variants=tuple(
+            VariantSpec(
+                name=f"{arm}/{case}",
+                system=dataclasses.replace(system, policy=pol),
+                faults=cases[case],
+            )
+            for arm, pol in RESILIENCE_ARMS.items()
+            for case in RESILIENCE_FAULT_CASES
+        ),
+    )
+
+
 # -------------------------------------------------- default registrations
 # Full-fidelity grids: the definitions the tracked BENCH_*.json baselines
 # are produced from (benchmarks/{network,batching,control}_capacity.py are
@@ -306,6 +400,7 @@ register_experiment(
 )
 register_experiment(batching_capacity_spec())
 register_experiment(control_capacity_spec())
+register_experiment(resilience_spec())
 
 # Reduced CI grids — mirror benchmarks/perf_speedup.py QUICK_*_KW (the
 # configs BENCH_perf.json quick_ref_s times); pinned against them in
@@ -328,4 +423,8 @@ register_experiment(
 register_experiment(
     control_capacity_spec(sim_time=8.0, n_seeds=1,
                           name="control_capacity_quick")
+)
+register_experiment(
+    resilience_spec(rates=(40.0, 100.0), sim_time=6.0, n_seeds=1,
+                    t_fail=2.0, t_recover=4.5, name="resilience_quick")
 )

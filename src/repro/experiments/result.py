@@ -18,7 +18,7 @@ import json
 from typing import Dict, List, Optional
 
 from ..core.simulator import SimResult
-from .spec import SCHEMA_VERSION, ExperimentSpec
+from .spec import _COMPAT_VERSIONS, SCHEMA_VERSION, ExperimentSpec
 
 __all__ = [
     "PointRun",
@@ -36,11 +36,15 @@ class PointRun:
     outside Def.-1 scoring (batched-node KV/batch stats, network route
     shares, controller admission counts, mobility handovers)."""
 
-    result: SimResult
+    result: Optional[SimResult]
     extras: Dict[str, object] = dataclasses.field(default_factory=dict)
     # wall-clock of this one simulation (seconds); lets sweep-time
     # regressions be attributed to a specific (arm, rate, seed) point
     duration_s: float = 0.0
+    # structured failure record (resilient sweeps, core.parallel.TaskError):
+    # {"error", "message", "attempts"} when this point could not be
+    # computed — `result` is None and seed-means simply skip the point
+    error: Optional[Dict[str, object]] = None
 
 
 @dataclasses.dataclass
@@ -49,7 +53,7 @@ class PointResult:
     (`core.capacity.mean_over_seeds`: NaN-safe, window-pooling)."""
 
     rate: float
-    mean: SimResult
+    mean: Optional[SimResult]  # None when every seed errored (resilient)
     seeds: List[PointRun]
 
 
@@ -100,12 +104,21 @@ class ExperimentResult:
             raise ValueError(f"points must be full/mean/none, got {points!r}")
 
         def enc_point(p: PointResult) -> dict:
-            d = {"rate": p.rate, "mean": dataclasses.asdict(p.mean)}
+            d = {
+                "rate": p.rate,
+                "mean": (
+                    dataclasses.asdict(p.mean) if p.mean is not None else None
+                ),
+            }
             if points == "full":
                 d["seeds"] = [
-                    {"result": dataclasses.asdict(s.result),
+                    {"result": (
+                        dataclasses.asdict(s.result)
+                        if s.result is not None else None
+                     ),
                      "extras": dict(s.extras),
-                     "duration_s": s.duration_s}
+                     "duration_s": s.duration_s,
+                     **({"error": dict(s.error)} if s.error else {})}
                     for s in p.seeds
                 ]
             return d
@@ -132,10 +145,10 @@ class ExperimentResult:
     @classmethod
     def from_dict(cls, d: dict) -> "ExperimentResult":
         version = d.get("schema_version")
-        if version != SCHEMA_VERSION:
+        if version not in _COMPAT_VERSIONS:
             raise ValueError(
-                f"result schema_version {version!r} != supported "
-                f"{SCHEMA_VERSION}"
+                f"result schema_version {version!r} not in supported "
+                f"{_COMPAT_VERSIONS}"
             )
 
         def dec_sim(sd: Optional[dict]) -> Optional[SimResult]:
@@ -150,7 +163,8 @@ class ExperimentResult:
                     seeds=[
                         PointRun(result=dec_sim(sd["result"]),
                                  extras=dict(sd.get("extras", {})),
-                                 duration_s=sd.get("duration_s", 0.0))
+                                 duration_s=sd.get("duration_s", 0.0),
+                                 error=sd.get("error"))
                         for sd in pd.get("seeds", [])
                     ],
                 )
@@ -184,6 +198,8 @@ class ExperimentResult:
         for a in self.arms:
             merged: Dict[str, int] = {}
             for p in a.points:
+                if p.mean is None:
+                    continue
                 for reason, k in (p.mean.drop_reasons or {}).items():
                     merged[reason] = merged.get(reason, 0) + k
             out[a.name] = dict(sorted(merged.items()))

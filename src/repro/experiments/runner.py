@@ -20,7 +20,14 @@ normalized here: `ControlSpec.controller`, `WorkloadSpec.arrival` /
 ``SimConfig.arrivals/window_s`` for single-cell runs and onto the
 corresponding `NetSimConfig` fields for multi-cell runs — a spec never
 cares which engine serves it (mobility is multi-cell only: single-cell
-runs reject it eagerly).
+runs reject it eagerly). Fault scenarios (`repro.faults.FaultSpec`, on the
+root spec or per variant) thread the same way: ``simulate(faults=)`` for
+single-cell arms, ``NetSimConfig.faults`` for multi-cell ones.
+
+Resilient sweeps: `SweepSpec.task_timeout_s` runs the pool in
+`parallel_map`'s resilient mode — a grid point that keeps timing out or
+raising yields a `PointRun` carrying a structured ``error`` record (its
+seed-mean skips it) instead of hanging or aborting the whole experiment.
 """
 
 from __future__ import annotations
@@ -31,7 +38,7 @@ from typing import Dict, List, Optional, Union
 from ..core.capacity import capacity_from_sweep, mean_over_seeds
 from ..core.channel import ChannelConfig
 from ..core.latency_model import LatencyModel, ModelService
-from ..core.parallel import parallel_map
+from ..core.parallel import TaskError, parallel_map
 from ..core.simulator import SimConfig, simulate
 from .result import (
     ArmResult,
@@ -99,7 +106,8 @@ def _single_cell_point(
             return holder["node"]
 
         res = simulate(scheme, cfg, node_factory=factory, fast=sw.fast,
-                       controller=arm.control.controller, recorder=recorder)
+                       controller=arm.control.controller, recorder=recorder,
+                       faults=arm.faults)
         node = holder["node"]
         extras = {
             "avg_batch": round(node.stats.avg_batch(), 2),
@@ -114,7 +122,8 @@ def _single_cell_point(
         svc = ModelService(hw, profile,
                            fidelity=arm.system.fidelity or "paper")
         res = simulate(scheme, cfg, svc, fast=sw.fast,
-                       controller=arm.control.controller, recorder=recorder)
+                       controller=arm.control.controller, recorder=recorder,
+                       faults=arm.faults)
         extras = {}
     return PointRun(result=res, extras=extras)
 
@@ -139,6 +148,7 @@ def _multi_cell_point(
         mobility=arm.workload.mobility,
         controller=arm.control.controller,
         window_s=sw.window_s,
+        faults=arm.faults,
     )
     net = simulate_network(cfg, arm.system.policy, fast=sw.fast,
                            recorder=recorder)
@@ -223,8 +233,19 @@ def run(
         for s in range(arm.sweep.n_seeds)
     ]
     t0 = time.perf_counter()
-    flat = parallel_map(run_point, tasks, workers=workers, chunk=chunk)
+    flat = parallel_map(run_point, tasks, workers=workers, chunk=chunk,
+                        task_timeout_s=spec.sweep.task_timeout_s)
     wall = time.perf_counter() - t0
+    # resilient sweeps (SweepSpec.task_timeout_s): a point that timed out
+    # or kept raising comes back as a TaskError — keep it as a structured
+    # error on its PointRun so the sweep reports every point it *could*
+    # compute instead of aborting the grid
+    flat = [
+        PointRun(result=None, error={
+            "error": p.error, "message": p.message, "attempts": p.attempts,
+        }) if isinstance(p, TaskError) else p
+        for p in flat
+    ]
 
     out: List[ArmResult] = []
     cursor = 0
@@ -235,9 +256,13 @@ def run(
         for lam in rates:
             seeds = flat[cursor:cursor + n_seeds]
             cursor += n_seeds
-            mean = mean_over_seeds([p.result for p in seeds], arm.name)
+            good = [p.result for p in seeds if p.result is not None]
+            mean = mean_over_seeds(good, arm.name) if good else None
             points.append(PointResult(rate=lam, mean=mean, seeds=seeds))
-        sats = [p.mean.satisfaction for p in points]
+        sats = [
+            p.mean.satisfaction if p.mean is not None else float("nan")
+            for p in points
+        ]
         alpha = arm.sweep.alpha
         curve = CapacityCurve(
             rates=rates,

@@ -15,6 +15,9 @@ single declarative surface over both:
                  a single-cell scheme + GPU; node kind (classic/batched)
                  and max_batch for either
   ControlSpec    the online controller preset (eagerly validated)
+  FaultSpec      (repro.faults, on the root/variant) the fault-injection
+                 scenario: node outages / crash processes, link outages,
+                 brownouts — strictly opt-in, None = fault-free fast path
   SweepSpec      how to measure: rate grid, seeds (every grid point derives
                  its seed as ``base_seed + 1000 * seed_index``, the
                  convention all tracked baselines were produced under),
@@ -55,6 +58,13 @@ from ..core.latency_model import (
     ModelService,
 )
 from ..core.simulator import SchemeConfig
+from ..faults import (
+    Brownout,
+    FaultSpec,
+    LinkOutage,
+    NodeCrashProcess,
+    NodeOutage,
+)
 from ..network.fleet import GPU_SPECS
 from ..network.routing import POLICIES
 from ..network.scenarios import SCENARIOS, Scenario
@@ -76,7 +86,13 @@ __all__ = [
 # Bump whenever the serialized shape of any spec class changes (field
 # added/renamed/removed, encoding changed). The pinned-golden test in
 # tests/test_experiments.py fails on any drift, forcing the bump.
-SCHEMA_VERSION = 1
+# History: 1 = PR 5 initial schema; 2 = fault injection (FaultSpec on the
+# spec/variant tree, SweepSpec.task_timeout_s). Version-1 files still load:
+# every v2 field is additive with a None/absent default (see from_dict).
+SCHEMA_VERSION = 2
+
+# older schema versions from_dict still accepts (additive-only changes)
+_COMPAT_VERSIONS = (1, SCHEMA_VERSION)
 
 # name -> ModelProfile (the analytic latency model's model registry)
 MODEL_PROFILES: Dict[str, ModelProfile] = {LLAMA2_7B.name: LLAMA2_7B}
@@ -160,6 +176,11 @@ class SweepSpec:
     alpha: float = 0.95  # Def.-2 satisfaction threshold
     fast: bool = True  # False = reference draw-per-slot engine
     workers: Union[int, str, None] = 0  # default pool size for run()
+    # resilient parallel_map: per-point wall-clock budget (seconds); a
+    # point that keeps timing out / raising becomes a structured error on
+    # its PointRun instead of hanging the sweep. None = historical
+    # fail-fast behavior.
+    task_timeout_s: Optional[float] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -176,6 +197,10 @@ class VariantSpec:
     rates: Optional[Tuple[float, ...]] = None
     n_seeds: Optional[int] = None
     sim_time: Optional[float] = None
+    # fault scenario override; None = inherit the base spec's. To switch
+    # faults *off* in one arm of a faulted experiment, override with an
+    # empty FaultSpec() (empty == fault-free by the opt-in contract).
+    faults: Optional[FaultSpec] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -189,6 +214,7 @@ class ResolvedArm:
     system: SystemSpec
     control: ControlSpec
     sweep: SweepSpec  # rates/n_seeds/sim_time already overridden
+    faults: Optional[FaultSpec] = None  # variant-over-base, like the rest
 
     @property
     def rates(self) -> Tuple[float, ...]:
@@ -209,13 +235,16 @@ class ExperimentSpec:
     control: ControlSpec = dataclasses.field(default_factory=ControlSpec)
     variants: Tuple[VariantSpec, ...] = ()
     description: str = ""
+    # fault-injection scenario applied to every arm (variants override);
+    # None keeps the experiment on the fault-free fast path bit-identically
+    faults: Optional[FaultSpec] = None
 
     # ------------------------------------------------------------ resolve
     def resolve_arms(self) -> List[ResolvedArm]:
         if not self.variants:
             return [
                 ResolvedArm(self.name, self.workload, self.system,
-                            self.control, self.sweep)
+                            self.control, self.sweep, self.faults)
             ]
         arms = []
         for v in self.variants:
@@ -236,6 +265,7 @@ class ExperimentSpec:
                     v.system if v.system is not None else self.system,
                     v.control if v.control is not None else self.control,
                     sw,
+                    v.faults if v.faults is not None else self.faults,
                 )
             )
         return arms
@@ -272,6 +302,15 @@ class ExperimentSpec:
                 raise ValueError(
                     f"arm {arm.name!r}: mobility requires a multi_cell system"
                 )
+            if (
+                sysm.kind == "single_cell"
+                and arm.faults is not None
+                and arm.faults.link_outages
+            ):
+                raise ValueError(
+                    f"arm {arm.name!r}: link faults require a multi_cell "
+                    "system (single-cell has no wireline fabric)"
+                )
             if not arm.sweep.rates:
                 raise ValueError(f"arm {arm.name!r} has an empty rate grid")
             if arm.sweep.n_seeds < 1:
@@ -287,10 +326,10 @@ class ExperimentSpec:
     @classmethod
     def from_dict(cls, d: dict) -> "ExperimentSpec":
         version = d.get("schema_version")
-        if version != SCHEMA_VERSION:
+        if version not in _COMPAT_VERSIONS:
             raise ValueError(
-                f"spec schema_version {version!r} != supported "
-                f"{SCHEMA_VERSION} (a spec without a version is not trusted)"
+                f"spec schema_version {version!r} not in supported "
+                f"{_COMPAT_VERSIONS} (a spec without a version is not trusted)"
             )
         d = {k: v for k, v in d.items() if k != "schema_version"}
         spec = _decode(dict(d, __type__="ExperimentSpec"))
@@ -376,6 +415,7 @@ _CODEC_TYPES: Dict[str, type] = {
         PoissonProcess, PiecewiseRate, DiurnalRate, FlashCrowd, MMPP,
         MobilityConfig, ChannelConfig, SiteConfig, TopologyConfig,
         SchemeConfig, Scenario, HardwareSpec, ModelProfile, ModelService,
+        NodeOutage, NodeCrashProcess, LinkOutage, Brownout, FaultSpec,
         WorkloadSpec, SystemSpec, ControlSpec, SweepSpec, VariantSpec,
         ExperimentSpec,
     )

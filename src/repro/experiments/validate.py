@@ -1,8 +1,9 @@
 """Schema validation for the tracked benchmark baselines.
 
 Every tracked capacity baseline (``BENCH_network.json``,
-``BENCH_batching.json``, ``BENCH_control.json``) is a wrapper around an
-`ExperimentResult` payload:
+``BENCH_batching.json``, ``BENCH_control.json``,
+``BENCH_resilience.json``) is a wrapper around an `ExperimentResult`
+payload:
 
     {
       "schema_version": <int>,      # must match the current schema
@@ -30,11 +31,12 @@ from .spec import SCHEMA_VERSION
 
 __all__ = ["BENCH_BASELINES", "validate_bench", "validate_bench_file"]
 
-# repo-root tracked baselines produced by the three capacity benchmarks
+# repo-root tracked baselines produced by the capacity benchmarks
 BENCH_BASELINES = (
     "BENCH_network.json",
     "BENCH_batching.json",
     "BENCH_control.json",
+    "BENCH_resilience.json",
 )
 
 

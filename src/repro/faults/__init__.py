@@ -1,0 +1,23 @@
+"""Deterministic fault injection and recovery.
+
+`spec` declares serializable fault scenarios (node crashes, link
+outages/degradation, brownouts plus recovery-policy knobs); `schedule`
+binds a spec to a seeded, slot-snapped timeline that the simulators
+query. Faults are strictly opt-in — without a FaultSpec every
+fixed-seed result is bit-identical to the fault-free simulator.
+"""
+from .spec import (Brownout, FaultSpec, LinkOutage, NodeCrashProcess,
+                   NodeOutage)
+from .schedule import (FaultSchedule, NODE_FAIL, NODE_RECOVER, bind_faults)
+
+__all__ = [
+    "Brownout",
+    "FaultSpec",
+    "LinkOutage",
+    "NodeCrashProcess",
+    "NodeOutage",
+    "FaultSchedule",
+    "NODE_FAIL",
+    "NODE_RECOVER",
+    "bind_faults",
+]

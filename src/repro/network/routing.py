@@ -22,6 +22,14 @@ paper Fig. 5), and names the fleet node that will serve it. Policies:
                       is added to each completion estimate, so a controller
                       can shift load RAN <-> MEC on its epoch. Without a
                       bound state it decides exactly like slack_aware.
+
+Health awareness (repro.faults): when the driver binds a fault schedule
+to the topology, `least_loaded`/`slack_aware`/`controlled` draw their
+candidates from `Topology.healthy_candidates` — crashed nodes, nodes
+inside the recovery hysteresis window, and nodes behind a down link are
+filtered out (failover). `local_only` and `mec_only` stay deliberately
+naive: their blindness to failures *is* the baseline the survivability
+study measures ICC against.
 """
 
 from __future__ import annotations
@@ -71,7 +79,7 @@ class LeastLoaded(RoutingPolicy):
             fn = self.topo.nodes[name]
             return len(fn.node) + fn.in_transit + int(fn.node.busy_until > now)
 
-        return min(self.topo.candidates(site), key=depth)
+        return min(self.topo.healthy_candidates(site, now), key=depth)
 
 
 class SlackAware(RoutingPolicy):
@@ -83,15 +91,15 @@ class SlackAware(RoutingPolicy):
     def route(self, job: Job, site: int, now: float) -> str:
         topo = self.topo
         finish: Dict[str, float] = {}
-        for name in topo.candidates(site):
-            arrival = now + topo.wireline_latency(site, name)
+        for name in topo.healthy_candidates(site, now):
+            arrival = now + topo.wireline_latency(site, name, now=now)
             finish[name] = (
                 topo.nodes[name].predict_finish(job, arrival, now)
                 + self._bias(name)
             )
 
         local = topo.local_node(site)
-        if finish[local] <= job.deadline:
+        if local in finish and finish[local] <= job.deadline:
             return local  # keep RAN-resident whenever the deadline holds
         feasible = {n: f for n, f in finish.items() if f <= job.deadline}
         pool = feasible or finish

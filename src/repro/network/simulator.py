@@ -44,6 +44,8 @@ from ..control.arrivals import ArrivalProcess
 from ..core.latency_model import LLAMA2_7B, ModelProfile
 from ..core.scheduler import Job
 from ..core.simulator import SimConfig, SimResult, SlotEngine, score_jobs
+from ..faults import FaultSpec, bind_faults
+from ..faults.schedule import NODE_FAIL, NODE_RECOVER
 from ..telemetry.recorder import active as _active_recorder
 from .routing import RoutingPolicy, get_policy
 from .scenarios import SCENARIOS, Scenario
@@ -75,6 +77,10 @@ class NetSimConfig:
     controller: Optional[ControllerLike] = None
     # transient-metric window length for score_jobs (None = off)
     window_s: Optional[float] = None
+    # fault-injection scenario (repro.faults.FaultSpec); None (or an
+    # empty spec) keeps every fixed-seed result bit-identical to the
+    # fault-free simulator — the repo's master contract
+    faults: Optional[FaultSpec] = None
 
     def __post_init__(self):
         validate_controller(self.controller)
@@ -91,6 +97,10 @@ class NetResult:
     n_rejected: int = 0  # jobs rejected by admission control
     n_handovers: int = 0  # mobility handovers executed
     n_rehomed: int = 0  # in-flight bursts re-homed across Xn
+    # fault-injection accounting (zero on fault-free runs)
+    n_node_failures: int = 0  # node crash events executed
+    n_redispatched: int = 0  # jobs re-dispatched after a crash / dead door
+    n_fault_drops: int = 0  # jobs lost to node_failure
 
     @property
     def satisfaction(self) -> float:
@@ -177,6 +187,119 @@ def simulate_network(
     slot = slots.pop()
     n_slots = int(math.ceil(cfg.sim_time / slot))
 
+    # driver event queue: mobility handovers + burst re-injections, fault
+    # crash/recover instants, and crash-recovery retries/re-deliveries;
+    # the idle fast-forward clamps at the head. Created before the
+    # engines so the wireline/deliver closures can push into it.
+    events: list = []
+    eseq = itertools.count()
+
+    def push_event(t: float, kind: str, payload) -> None:
+        heapq.heappush(
+            events, (int(math.ceil(t / slot - 1e-9)), next(eseq), kind, payload)
+        )
+
+    # ------------------------------------------------- fault injection
+    # Strictly opt-in: `sched is None` (no spec, or an empty one) keeps
+    # every code path below bit-identical to the fault-free simulator.
+    sched = None
+    if cfg.faults is not None and not cfg.faults.empty:
+        sched = bind_faults(cfg.faults, slot, cfg.sim_time, cfg.seed,
+                            node_names=list(topo.nodes))
+        topo.fault_sched = sched  # routing + latency lookups go health-aware
+        for fname, fn in topo.nodes.items():
+            if sched.has_brownouts(fname):
+                fn.node.speed_scale = (
+                    lambda t, _n=fname: sched.slow_factor(_n, t)
+                )
+        for t_ev, kind, name in sched.node_events():
+            push_event(t_ev, kind, (t_ev, name))
+    n_node_failures = n_redispatched = n_fault_drops = 0
+    retry_counts: Dict[int, int] = {}  # job uid -> dead-door retries used
+
+    def fault_drop(job: Job, t: float) -> None:
+        nonlocal n_fault_drops
+        job.dropped = True
+        job.drop_reason = "node_failure"
+        n_fault_drops += 1
+        if rec is not None:
+            rec.job_event("drop", job.uid, t, stage="node",
+                          reason="node_failure")
+
+    def fault_redispatch(job: Job, t: float, avoid: Optional[str]) -> bool:
+        """Re-route `job` from its cell at time t; False = no way out."""
+        nonlocal n_redispatched
+        route = pol.route(job, job.cell, t)
+        if sched.node_down(route, t) or (avoid is not None and route == avoid):
+            return False  # the policy insists on a dead/just-failed node
+        job.route = route
+        topo.nodes[route].commit(job)
+        t_arr = t + topo.wireline_latency(job.cell, route, now=t)
+        job.t_compute_arrival = t_arr
+        n_redispatched += 1
+        if rec is not None:
+            # the recorder resets the job's stage attribution: the lost
+            # attempt's prefill/decode becomes stall, the final attempt's
+            # service books normally, and the sums still telescope to e2e
+            rec.job_event("redispatch", job.uid, t, route=route,
+                          t_arrival=t_arr)
+        push_event(t_arr, "fault_deliver", (t_arr, job))
+        return True
+
+    def node_submit(job: Job, t: float) -> None:
+        """Hand `job` to its routed node, or retry/fail over while the
+        node is down: bounded exponential backoff at the door, then one
+        policy re-route (if `redispatch`), then a node_failure drop."""
+        name = job.route
+        if sched is not None and sched.node_down(name, t):
+            n = retry_counts.get(job.uid, 0)
+            if n < sched.max_retries:
+                retry_counts[job.uid] = n + 1
+                t_next = t + sched.retry_backoff_s * (2 ** n)
+                push_event(t_next, "fault_retry", (t_next, job))
+                return
+            if sched.redispatch and fault_redispatch(job, t, avoid=name):
+                return
+            fault_drop(job, t)
+            return
+        job.t_compute_arrival = max(job.t_compute_arrival, t)
+        topo.nodes[name].node.submit(job)
+
+    def handle_fault_event(kind: str, ev) -> bool:
+        """Process one fault-machinery event; False = not ours."""
+        nonlocal n_node_failures
+        if kind == NODE_FAIL:
+            t_ev, name = ev
+            fn = topo.nodes[name]
+            fn.node.run_until(t_ev)
+            until = sched.down_until(name, t_ev) or t_ev
+            affected = fn.node.crash(t_ev, until)
+            n_node_failures += 1
+            fe = getattr(rec, "fault_event", None)
+            if fe is not None:
+                fe(t_ev, NODE_FAIL, name, n_affected=len(affected))
+            for job in affected:
+                # lost queue + in-flight batch: drop, or re-dispatch via
+                # routing with full re-prefill on the new node
+                if not (sched.redispatch
+                        and fault_redispatch(job, t_ev, avoid=None)):
+                    fault_drop(job, t_ev)
+        elif kind == NODE_RECOVER:
+            t_ev, name = ev
+            fe = getattr(rec, "fault_event", None)
+            if fe is not None:
+                fe(t_ev, NODE_RECOVER, name)
+        elif kind == "fault_deliver":
+            t_arr, job = ev
+            topo.nodes[job.route].settle(job)
+            node_submit(job, t_arr)
+        elif kind == "fault_retry":
+            t_next, job = ev
+            node_submit(job, t_next)
+        else:
+            return False
+        return True
+
     arrival_spec = cfg.arrival if cfg.arrival is not None else sc.arrival
     mob = None
     if cfg.mobility is not None and cfg.mobility.n_roamers > 0:
@@ -220,12 +343,19 @@ def simulate_network(
         def wireline(job: Job, t: float, _site: int = i) -> float:
             job.route = pol.route(job, _site, t)
             topo.nodes[job.route].commit(job)  # visible while in transit
-            return topo.wireline_latency(_site, job.route)
+            if sched is None:
+                return topo.wireline_latency(_site, job.route)
+            # fault-aware: degraded links inflate, down links buffer the
+            # job at the gNB until recovery (store-and-forward)
+            return topo.wireline_latency(_site, job.route, now=t)
 
         def deliver(job: Job) -> None:
             fn = topo.nodes[job.route]
             fn.settle(job)
-            fn.node.submit(job)
+            if sched is None:
+                fn.node.submit(job)
+            else:
+                node_submit(job, job.t_compute_arrival)
 
         seed_i = cfg.seed + 7919 * i
         engines.append(
@@ -253,10 +383,6 @@ def simulate_network(
         )
     assert all(e.n_slots == n_slots for e in engines)
 
-    # driver event queue: mobility handovers (pre-drawn) + the burst
-    # re-injections they schedule; the fast-forward clamps at the head
-    events: list = []
-    eseq = itertools.count()
     roamer_cell: Dict[int, int] = {}
     if mob is not None:
         roamer_cell = {k: k % len(sites) for k in range(mob.n_roamers)}
@@ -303,7 +429,7 @@ def simulate_network(
                              (ev.roamer, job, bits, t_inj)),
                         )
                     n_rehomed += len(bursts)
-            else:  # inject
+            elif kind == "inject":
                 roamer, job, bits, t_inj = ev
                 # target the roamer's cell *now*, not at eviction time — a
                 # dwell shorter than the Xn transfer moved the UE again (a
@@ -314,11 +440,18 @@ def simulate_network(
                 engines[to].inject_burst(
                     mob.ue_index(to, roamer), job, bits, t_inj
                 )
+            else:  # fault machinery (crash/recover/retry/re-deliver)
+                handle_fault_event(kind, ev)
         if ctl is not None and s >= next_epoch:
+            now_ep = s * slot
             control_epoch(
-                ctl, state, s * slot, sc.b_total, engines,
+                ctl, state, now_ep, sc.b_total, engines,
                 [(fn.name, fn.node, fn.in_transit) for fn in nodes], svc_s,
                 recorder=rec,
+                down_nodes=(
+                    {n for n in topo.nodes if sched.node_down(n, now_ep)}
+                    if sched is not None else None
+                ),
             )
             next_epoch += epoch_slots
         if all(e.can_skip() for e in engines):
@@ -357,6 +490,13 @@ def simulate_network(
                 })
             next_sample = s + sample_stride
         s += 1
+    # drain fault-machinery events scheduled past the last slot (late
+    # recoveries, retries/re-deliveries near sim end) so every job still
+    # in the pipeline reaches a terminal state exactly once; retries the
+    # drain itself schedules land back on this heap in time order
+    while events:
+        _, _, kind, ev = heapq.heappop(events)
+        handle_fault_event(kind, ev)
     for fn in nodes:
         fn.node.run_until(float("inf"))
 
@@ -396,4 +536,7 @@ def simulate_network(
         n_rejected=state.total_rejected if state is not None else 0,
         n_handovers=n_handovers,
         n_rehomed=n_rehomed,
+        n_node_failures=n_node_failures,
+        n_redispatched=n_redispatched,
+        n_fault_drops=n_fault_drops,
     )

@@ -87,6 +87,10 @@ class Topology:
                 f"key on them), got {names}"
             )
         self.cfg = cfg
+        # bound fault timeline (repro.faults.FaultSchedule); the network
+        # driver attaches it so routing and latency lookups become
+        # health-aware. None = fault-free, every query short-circuits.
+        self.fault_sched = None
         self.nodes: Dict[str, FleetNode] = {
             self.MEC: build_fleet_node(
                 self.MEC, "mec", cfg.mec_gpu, cfg.mec_gpu_count, model=model,
@@ -118,14 +122,45 @@ class Topology:
         out.append(self.MEC)
         return out
 
-    def wireline_latency(self, site: int, node_name: str) -> float:
-        """gNB-of-`site` -> `node_name` wireline latency (s)."""
+    def healthy_candidates(self, site: int, now: float) -> List[str]:
+        """`candidates` filtered through the bound fault schedule: nodes
+        that are up (with recovery hysteresis, so flapping nodes don't
+        thrash load-aware policies) and reachable over an up link.
+
+        Degrades gracefully: if the filter empties the pool, fall back to
+        nodes that are merely up (ignoring hysteresis and link state),
+        then to the full candidate list — routing must always return
+        *something*; undeliverable dispatches are the retry machinery's
+        problem, not the router's."""
+        cands = self.candidates(site)
+        sched = self.fault_sched
+        if sched is None:
+            return cands
+        up = [n for n in cands
+              if sched.routable(n, now) and not sched.link_down(site, n, now)]
+        if up:
+            return up
+        up = [n for n in cands if not sched.node_down(n, now)]
+        return up or cands
+
+    def wireline_latency(self, site: int, node_name: str,
+                         now: Optional[float] = None) -> float:
+        """gNB-of-`site` -> `node_name` wireline latency (s).
+
+        With a bound fault schedule and a dispatch time `now`, link
+        degradation windows inflate the latency and a *down* link buffers
+        the job at the gNB until the link recovers (store-and-forward).
+        Without `now` (or fault-free) this is the static lookup."""
         s = self.cfg.sites[site]
         if node_name == self.MEC:
-            return s.t_backhaul_mec
-        if node_name == self.ran_of[site]:
-            return s.t_fronthaul
-        return self.cfg.t_inter_site
+            base = s.t_backhaul_mec
+        elif node_name == self.ran_of[site]:
+            base = s.t_fronthaul
+        else:
+            base = self.cfg.t_inter_site
+        if now is None or self.fault_sched is None:
+            return base
+        return self.fault_sched.link_latency(site, node_name, base, now)
 
 
 def three_cell_hetero(

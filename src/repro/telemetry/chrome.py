@@ -165,6 +165,24 @@ def chrome_trace(tel: dict) -> dict:
                 "args": args,
             })
 
+    # injected faults (repro.faults): fail/recover instants on the track of
+    # the node that went down, so the survivability story reads in place —
+    # the queue-depth counter collapses right at the node_fail marker
+    flt = tel.get("faults", {})
+    for j, t in enumerate(flt.get("t", [])):
+        t = _num(t)
+        if t is None:
+            continue
+        node = flt["node"][j] or "fleet"
+        args = {"node": node}
+        n_aff = flt.get("n_affected", [None] * len(flt["t"]))[j]
+        if n_aff is not None:
+            args["n_affected"] = n_aff
+        ev.append({
+            "name": flt["kind"][j], "cat": "fault", "ph": "i", "s": "p",
+            "ts": t * _US, "pid": pid(node), "tid": 0, "args": args,
+        })
+
     for rec in tel.get("epochs", []):
         t = _num(rec.get("t"))
         if t is None:

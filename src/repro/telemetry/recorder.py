@@ -81,6 +81,8 @@ class TraceRecorder(Protocol):
 
     def epoch(self, t: float, record: dict) -> None: ...
 
+    def fault_event(self, t: float, kind: str, node: str, **fields) -> None: ...
+
 
 class NullRecorder:
     """The zero-overhead default: disabled, so `active()` strips it before
@@ -95,6 +97,9 @@ class NullRecorder:
         pass
 
     def epoch(self, t: float, record: dict) -> None:
+        pass
+
+    def fault_event(self, t: float, kind: str, node: str, **fields) -> None:
         pass
 
 
@@ -117,7 +122,7 @@ class _JobTrace:
         "uid", "cell", "ue", "route", "t_gen", "t_uplink", "t_arrival",
         "t_start", "t_complete", "t_drop", "prefill_s", "decode_s",
         "n_prefill_chunks", "n_decode", "drop_stage", "drop_reason",
-        "n_rehomed",
+        "n_rehomed", "n_redispatched",
     )
 
     def __init__(self, uid: int, t_gen: float, cell: int, ue: int):
@@ -138,6 +143,7 @@ class _JobTrace:
         self.drop_stage: Optional[str] = None
         self.drop_reason: Optional[str] = None
         self.n_rehomed = 0
+        self.n_redispatched = 0
 
     def stages(self) -> Optional[Tuple[float, ...]]:
         """The six-stage breakdown, or None for a job that never completed.
@@ -181,6 +187,7 @@ class EventRecorder:
         self.series: Dict[str, Dict[str, list]] = {}
         self.epochs: List[dict] = []
         self.rehomes: List[Tuple[float, int, int, int]] = []
+        self.faults: List[dict] = []
         self._jobs: Dict[int, _JobTrace] = {}
 
     # ------------------------------------------------------------ lifecycle
@@ -224,6 +231,22 @@ class EventRecorder:
             jt.n_decode += 1
         elif kind == "complete":
             jt.t_complete = t
+        elif kind == "redispatch":
+            # node crash recovery (repro.faults): the job lost its queue
+            # slot / in-flight generation and restarts from scratch. The
+            # aborted attempt's booked service is erased — the final
+            # attempt's prefill/decode book normally, the lost work and
+            # the re-dispatch wait land in transport/queue, and the six
+            # stages still telescope to e2e exactly.
+            jt.n_redispatched += 1
+            jt.t_start = None
+            jt.t_complete = None
+            jt.prefill_s = 0.0
+            jt.decode_s = 0.0
+            jt.n_prefill_chunks = 0
+            jt.n_decode = 0
+            jt.route = fields.get("route", jt.route)
+            jt.t_arrival = fields.get("t_arrival", jt.t_arrival)
         elif kind in ("drop", "preempt", "rejected"):
             jt.drop_stage = (
                 "preempted" if kind == "preempt"
@@ -238,6 +261,10 @@ class EventRecorder:
                 else "queue_drop"
             )
             jt.t_drop = t
+            # a crash can retract an already-booked completion (the
+            # iteration that "finished" the job never ran): dropping is
+            # terminal, so the completion must not survive alongside it
+            jt.t_complete = None
         elif kind == "rehomed":
             jt.n_rehomed += 1
             frm = jt.cell
@@ -261,6 +288,12 @@ class EventRecorder:
 
     def epoch(self, t: float, record: dict) -> None:
         self.epochs.append(record)
+
+    def fault_event(self, t: float, kind: str, node: str, **fields) -> None:
+        """Injected-fault lifecycle (repro.faults): ``node_fail`` /
+        ``node_recover`` instants, stamped with the node name and any
+        driver-supplied fields (e.g. ``n_affected`` jobs on a crash)."""
+        self.faults.append({"t": t, "kind": kind, "node": node, **fields})
 
     # -------------------------------------------------------------- exports
     def stage_breakdown(self, uid: int) -> Optional[Dict[str, float]]:
@@ -313,6 +346,7 @@ class EventRecorder:
             "n_prefill_chunks": [j.n_prefill_chunks for j in jobs],
             "n_decode": [j.n_decode for j in jobs],
             "n_rehomed": [j.n_rehomed for j in jobs],
+            "n_redispatched": [j.n_redispatched for j in jobs],
         }
         stage_rows = [j.stages() for j in jobs]
         stages: Dict[str, list] = {
@@ -335,6 +369,12 @@ class EventRecorder:
                 "from_cell": [r[2] for r in self.rehomes],
                 "to_cell": [r[3] for r in self.rehomes],
             },
+            "faults": {
+                "t": [f["t"] for f in self.faults],
+                "kind": [f["kind"] for f in self.faults],
+                "node": [f["node"] for f in self.faults],
+                "n_affected": [f.get("n_affected") for f in self.faults],
+            },
             "counts": {
                 "jobs": len(jobs),
                 "events": len(self.events),
@@ -342,6 +382,8 @@ class EventRecorder:
                 "dropped": sum(j.drop_stage is not None for j in jobs),
                 "drop_reasons": self.drop_reason_counts(),
                 "rehomes": len(self.rehomes),
+                "redispatches": sum(j.n_redispatched for j in jobs),
+                "faults": len(self.faults),
                 "epochs": len(self.epochs),
             },
         }

@@ -1,0 +1,512 @@
+"""Fault-injection subsystem: opt-in, deterministic, exactly-once.
+
+Four contracts pin the PR 8 resilience layer:
+
+  1. **Faults are strictly opt-in**: ``faults=None`` (the default) and an
+     empty ``FaultSpec()`` produce *bit-identical* fixed-seed results
+     across {classic, batched} x {single-cell, network}. Combined with
+     the pinned pre-PR values in test_telemetry.py (which run with the
+     default), this proves the fault machinery is provably absent when
+     nothing is injected.
+  2. **Schedules are deterministic**: binding a spec twice yields the
+     same timeline; crash-process draws depend only on
+     (seed, spec salt, process salt); every fault instant sits on the
+     slot grid so slot-stepped drivers agree with continuous queries.
+  3. **Fast == reference under faults**: the injected timeline is part of
+     the trajectory contract — both engines replay the identical crash /
+     recovery / outage sequence.
+  4. **Exactly-once termination**: no job ever ends both completed and
+     dropped (a crash retracts the booked completion before the drop or
+     redispatch), and faults never leak extra unterminated jobs beyond
+     the fault-free run's sim-end stragglers.
+
+Plus the satellites: spec validation and JSON codec (schema v2, v1
+golden still loads), kv_requeue opt-in relief, and resilient
+``parallel_map`` (per-task timeout/retry -> structured ``TaskError``).
+"""
+
+import dataclasses
+import math
+
+import pytest
+
+from repro.batching import BatchedComputeNode
+from repro.batching.kv_cache import KVCache
+from repro.core.latency_model import (
+    GH200_NVL2,
+    LLAMA2_7B,
+    LatencyModel,
+    ModelService,
+)
+from repro.core.parallel import TaskError, parallel_map
+from repro.core.simulator import SCHEMES, SimConfig, simulate
+from repro.experiments import ExperimentSpec, SCHEMA_VERSION, get_experiment
+from repro.faults import (
+    Brownout,
+    FaultSpec,
+    LinkOutage,
+    NodeCrashProcess,
+    NodeOutage,
+    bind_faults,
+)
+from repro.faults.schedule import NODE_FAIL, NODE_RECOVER
+from repro.network import SCENARIOS, simulate_network, three_cell_hetero
+from repro.network.simulator import config_for_load
+from repro.telemetry import STAGE_FIELDS, EventRecorder, chrome_trace
+
+SVC = ModelService(GH200_NVL2.scaled(2), LLAMA2_7B, "paper")
+LM = LatencyModel(GH200_NVL2.scaled(2), LLAMA2_7B, fidelity="extended")
+
+# one MEC crash window well inside the horizon — the shared scenario for
+# the equivalence / exactly-once matrix below
+FS_CRASH = FaultSpec(node_outages=(NodeOutage("mec", 1.5, 3.0),))
+
+
+def _batched_factory(**kw):
+    def factory():
+        return BatchedComputeNode(LM, max_batch=8, policy="priority",
+                                  drop_infeasible=True, **kw)
+
+    return factory
+
+
+def _net_cfg(load=60.0, sim_time=5.0, seed=2, **kw):
+    return config_for_load(
+        three_cell_hetero(), SCENARIOS["ar_translation"], load,
+        sim_time=sim_time, warmup=1.0, seed=seed, **kw,
+    )
+
+
+def assert_results_equal(a, b):
+    """Exact SimResult equality, NaN-aware, ignoring the telemetry
+    attachment (the one field tracing is allowed to change)."""
+    for f in dataclasses.fields(a):
+        if f.name == "telemetry":
+            continue
+        va, vb = getattr(a, f.name), getattr(b, f.name)
+        if isinstance(va, float) and math.isnan(va):
+            assert isinstance(vb, float) and math.isnan(vb), f.name
+        else:
+            assert va == vb, (f.name, va, vb)
+
+
+# ---------------------------------------------------------------- spec
+class TestFaultSpecValidation:
+    def test_outage_window_ordering(self):
+        with pytest.raises(ValueError):
+            NodeOutage("mec", 3.0, 3.0)
+        with pytest.raises(ValueError):
+            NodeOutage("mec", -1.0, 2.0)
+
+    def test_crash_process_params(self):
+        with pytest.raises(ValueError):
+            NodeCrashProcess("mec", mtbf_s=0.0, mttr_s=1.0)
+        with pytest.raises(ValueError):
+            NodeCrashProcess("mec", mtbf_s=1.0, mttr_s=0.0)
+
+    def test_link_outage_params(self):
+        with pytest.raises(ValueError):
+            LinkOutage(2.0, 1.0)
+        with pytest.raises(ValueError):
+            LinkOutage(1.0, 2.0, down=False, latency_factor=0.5)
+        with pytest.raises(ValueError):
+            LinkOutage(1.0, 2.0, down=False, latency_add_s=-0.1)
+
+    def test_brownout_params(self):
+        with pytest.raises(ValueError):
+            Brownout("mec", 1.0, 2.0, slow_factor=0.9)
+        with pytest.raises(ValueError):
+            Brownout("mec", 2.0, 1.0, slow_factor=2.0)
+
+    def test_recovery_knobs(self):
+        with pytest.raises(ValueError):
+            FaultSpec(max_retries=-1)
+        with pytest.raises(ValueError):
+            FaultSpec(retry_backoff_s=-0.01)
+        with pytest.raises(ValueError):
+            FaultSpec(hysteresis_s=-1.0)
+
+    def test_empty_property(self):
+        assert FaultSpec().empty
+        assert not FS_CRASH.empty
+        assert not FaultSpec(
+            brownouts=(Brownout("mec", 1.0, 2.0, 2.0),)
+        ).empty
+
+
+# ------------------------------------------------------------ schedule
+class TestFaultSchedule:
+    def test_bind_is_deterministic(self):
+        spec = FaultSpec(
+            node_outages=(NodeOutage("mec", 1.0, 2.0),),
+            crash_processes=(NodeCrashProcess("ran:cell0", 1.5, 0.5),),
+        )
+        a = bind_faults(spec, 0.000125, 8.0, seed=7)
+        b = bind_faults(spec, 0.000125, 8.0, seed=7)
+        assert a.node_events() == b.node_events()
+        assert not a.empty
+
+    def test_crash_process_depends_only_on_seed_and_salt(self):
+        spec = FaultSpec(crash_processes=(NodeCrashProcess("mec", 1.0, 0.3),))
+        base = bind_faults(spec, 0.000125, 20.0, seed=0).node_events()
+        other_seed = bind_faults(spec, 0.000125, 20.0, seed=1).node_events()
+        salted = bind_faults(
+            dataclasses.replace(spec, salt=9), 0.000125, 20.0, seed=0
+        ).node_events()
+        assert base  # MTBF 1s over 20s: events essentially certain
+        assert base != other_seed
+        assert base != salted
+
+    def test_events_snap_to_slot_grid(self):
+        slot = 0.000125
+        spec = FaultSpec(
+            node_outages=(NodeOutage("mec", 1.00001, 2.00007),),
+            crash_processes=(NodeCrashProcess("mec", 2.0, 0.5),),
+        )
+        sched = bind_faults(spec, slot, 10.0, seed=3)
+        for t, kind, node in sched.node_events():
+            slots = t / slot
+            assert abs(slots - round(slots)) < 1e-6, (t, kind, node)
+            assert kind in (NODE_FAIL, NODE_RECOVER)
+            assert node == "mec"
+
+    def test_node_down_and_routable_hysteresis(self):
+        spec = FaultSpec(node_outages=(NodeOutage("mec", 2.0, 4.0),),
+                         hysteresis_s=0.25)
+        sched = bind_faults(spec, 0.001, 8.0, seed=0)
+        assert not sched.node_down("mec", 1.999)
+        assert sched.node_down("mec", 2.0)
+        assert sched.node_down("mec", 3.999)
+        assert not sched.node_down("mec", 4.0)
+        assert sched.down_until("mec", 2.5) == 4.0
+        # routable only after the hysteresis hold-down expires
+        assert sched.routable("mec", 1.999)
+        assert not sched.routable("mec", 2.0)
+        assert not sched.routable("mec", 4.0)
+        assert not sched.routable("mec", 4.24)
+        assert sched.routable("mec", 4.25)
+        # an untouched node is always routable
+        assert sched.routable("ran:cell0", 3.0)
+
+    def test_overlapping_outages_merge(self):
+        spec = FaultSpec(node_outages=(
+            NodeOutage("mec", 1.0, 3.0), NodeOutage("mec", 2.0, 4.0),
+        ))
+        sched = bind_faults(spec, 0.001, 8.0, seed=0)
+        ev = sched.node_events()
+        assert [k for _, k, _ in ev] == [NODE_FAIL, NODE_RECOVER]
+        assert ev[0][0] == 1.0 and ev[1][0] == 4.0
+
+    def test_link_store_and_forward(self):
+        spec = FaultSpec(link_outages=(LinkOutage(2.0, 4.0, node="mec"),))
+        sched = bind_faults(spec, 0.001, 8.0, seed=0)
+        assert sched.link_down(0, "mec", 3.0)
+        assert not sched.link_down(0, "mec", 4.0)
+        assert not sched.link_down(0, "ran:cell0", 3.0)
+        # mid-outage dispatch buffers until recovery, then pays base
+        assert sched.link_latency(0, "mec", 0.01, 3.0) == pytest.approx(1.01)
+        assert sched.link_latency(0, "mec", 0.01, 5.0) == pytest.approx(0.01)
+
+    def test_link_degradation(self):
+        spec = FaultSpec(link_outages=(LinkOutage(
+            2.0, 4.0, node="mec", down=False,
+            latency_factor=2.0, latency_add_s=0.005,
+        ),))
+        sched = bind_faults(spec, 0.001, 8.0, seed=0)
+        assert not sched.link_down(0, "mec", 3.0)
+        assert sched.link_latency(0, "mec", 0.01, 3.0) == pytest.approx(0.025)
+
+    def test_brownout_slow_factor(self):
+        spec = FaultSpec(brownouts=(Brownout("mec", 1.0, 2.0, 3.0),))
+        sched = bind_faults(spec, 0.001, 8.0, seed=0)
+        assert sched.slow_factor("mec", 1.5) == pytest.approx(3.0)
+        assert sched.slow_factor("mec", 2.5) == pytest.approx(1.0)
+        assert sched.slow_factor("ran:cell0", 1.5) == pytest.approx(1.0)
+
+    def test_unknown_node_rejected(self):
+        with pytest.raises(ValueError, match="unknown node"):
+            bind_faults(
+                FaultSpec(node_outages=(NodeOutage("nope", 1.0, 2.0),)),
+                0.001, 8.0, seed=0, node_names=["mec", "ran:cell0"],
+            )
+
+
+# ---------------------------------------------- opt-in bit-identity
+class TestFaultsOffIdentity:
+    """faults=None == FaultSpec() bit-identically, all four engines.
+
+    The pinned pre-PR values in test_telemetry.py run with the default
+    (None); these close the loop for the explicit empty spec.
+    """
+
+    def test_classic_single_cell(self):
+        cfg = SimConfig(n_ues=40, sim_time=4.0, seed=3)
+        off = simulate(SCHEMES["icc"], cfg, SVC, faults=None)
+        empty = simulate(SCHEMES["icc"], cfg, SVC, faults=FaultSpec())
+        assert_results_equal(off, empty)
+
+    def test_batched_single_cell(self):
+        cfg = SimConfig(n_ues=40, sim_time=4.0, seed=3)
+        off = simulate(SCHEMES["icc"], cfg, node_factory=_batched_factory(),
+                       faults=None)
+        empty = simulate(SCHEMES["icc"], cfg,
+                         node_factory=_batched_factory(), faults=FaultSpec())
+        assert_results_equal(off, empty)
+
+    @pytest.mark.parametrize("policy", ["slack_aware", "mec_only"])
+    def test_classic_network(self, policy):
+        off = simulate_network(_net_cfg(load=50.0, sim_time=4.0), policy)
+        empty = simulate_network(
+            _net_cfg(load=50.0, sim_time=4.0, faults=FaultSpec()), policy)
+        assert_results_equal(off.total, empty.total)
+        assert off.route_share == empty.route_share
+
+    def test_batched_network(self):
+        kw = dict(load=50.0, sim_time=4.0, node_kind="batched", max_batch=8)
+        off = simulate_network(_net_cfg(**kw), "slack_aware")
+        empty = simulate_network(
+            _net_cfg(faults=FaultSpec(), **kw), "slack_aware")
+        assert_results_equal(off.total, empty.total)
+        assert off.route_share == empty.route_share
+
+
+# ---------------------------------------------- fast == reference
+class TestFastReferenceWithFaults:
+    @pytest.mark.parametrize("policy", ["slack_aware", "mec_only"])
+    def test_network_node_crash(self, policy):
+        cfg = _net_cfg(faults=FS_CRASH)
+        ref = simulate_network(cfg, policy, fast=False)
+        fast = simulate_network(cfg, policy, fast=True)
+        assert_results_equal(ref.total, fast.total)
+        assert ref.route_share == fast.route_share
+
+    def test_network_backhaul_outage(self):
+        fs = FaultSpec(link_outages=(LinkOutage(1.5, 3.0, node="mec"),))
+        cfg = _net_cfg(faults=fs)
+        ref = simulate_network(cfg, "mec_only", fast=False)
+        fast = simulate_network(cfg, "mec_only", fast=True)
+        assert_results_equal(ref.total, fast.total)
+
+    def test_classic_single_cell_crash(self):
+        cfg = SimConfig(n_ues=40, sim_time=4.0, seed=3)
+        fs = FaultSpec(node_outages=(NodeOutage("node", 1.5, 2.5),))
+        ref = simulate(SCHEMES["icc"], cfg, SVC, faults=fs, fast=False)
+        fast = simulate(SCHEMES["icc"], cfg, SVC, faults=fs, fast=True)
+        assert_results_equal(ref, fast)
+
+    def test_batched_single_cell_brownout(self):
+        cfg = SimConfig(n_ues=30, sim_time=4.0, seed=3)
+        fs = FaultSpec(brownouts=(Brownout("node", 1.0, 2.5, 2.0),))
+        ref = simulate(SCHEMES["icc"], cfg, node_factory=_batched_factory(),
+                       faults=fs, fast=False)
+        fast = simulate(SCHEMES["icc"], cfg, node_factory=_batched_factory(),
+                        faults=fs, fast=True)
+        assert_results_equal(ref, fast)
+
+
+# ------------------------------------------------- exactly-once + drops
+def _terminal_counts(tel):
+    tc, td = tel["jobs"]["t_complete"], tel["jobs"]["t_drop"]
+    both = sum(1 for c, d in zip(tc, td) if c is not None and d is not None)
+    neither = sum(1 for c, d in zip(tc, td) if c is None and d is None)
+    return both, neither
+
+
+class TestCrashRecoverySemantics:
+    @pytest.mark.parametrize("policy", ["slack_aware", "mec_only"])
+    def test_exactly_once_termination(self, policy):
+        """A crash may retract a booked completion, but every job still
+        terminates at most once — and faults add no unterminated jobs
+        beyond the fault-free run's sim-end stragglers."""
+        rec = EventRecorder()
+        faulted = simulate_network(_net_cfg(faults=FS_CRASH), policy,
+                                   recorder=rec)
+        rec_off = EventRecorder()
+        clean = simulate_network(_net_cfg(), policy, recorder=rec_off)
+
+        both, neither = _terminal_counts(faulted.total.telemetry)
+        both_off, neither_off = _terminal_counts(clean.total.telemetry)
+        assert both == 0 and both_off == 0
+        assert neither == neither_off
+
+    def test_mec_only_pays_node_failures(self):
+        """mec_only keeps dispatching into the hole: bounded retries,
+        then node_failure drops; health-aware slack_aware routes around
+        it and keeps satisfaction strictly higher."""
+        mec = simulate_network(_net_cfg(faults=FS_CRASH), "mec_only")
+        icc = simulate_network(_net_cfg(faults=FS_CRASH), "slack_aware")
+        assert (mec.total.drop_reasons or {}).get("node_failure", 0) > 0
+        assert icc.total.satisfaction > mec.total.satisfaction
+
+    def test_redispatch_off_drops_instead(self):
+        fs = dataclasses.replace(FS_CRASH, redispatch=False)
+        rec = EventRecorder()
+        res = simulate_network(_net_cfg(load=100.0, faults=fs),
+                               "slack_aware", recorder=rec)
+        tel = res.total.telemetry
+        assert tel["counts"]["redispatches"] == 0
+        assert (res.total.drop_reasons or {}).get("node_failure", 0) > 0
+
+    def test_redispatch_on_reroutes_and_telescopes(self):
+        """Redispatched jobs re-enter routing (n_redispatched > 0) and
+        their six-stage attribution still telescopes to end-to-end."""
+        rec = EventRecorder()
+        res = simulate_network(_net_cfg(load=100.0, faults=FS_CRASH),
+                               "slack_aware", recorder=rec)
+        tel = res.total.telemetry
+        assert tel["counts"]["redispatches"] > 0
+        assert tel["counts"]["faults"] >= 2  # fail + recover instants
+        jobs, stages = tel["jobs"], tel["stages"]
+        checked = 0
+        for i in range(len(jobs["uid"])):
+            t_gen, t_done = jobs["t_gen"][i], jobs["t_complete"][i]
+            if t_done is None:
+                continue
+            total = sum(stages[f][i] for f in STAGE_FIELDS)
+            assert abs(total - (t_done - t_gen)) <= 1e-9, jobs["uid"][i]
+            checked += 1
+        assert checked > 0
+
+    def test_chrome_trace_has_fault_instants(self):
+        rec = EventRecorder()
+        simulate_network(_net_cfg(faults=FS_CRASH), "slack_aware",
+                         recorder=rec)
+        ev = chrome_trace(rec.to_telemetry())["traceEvents"]
+        kinds = {e["name"] for e in ev if e.get("cat") == "fault"}
+        assert NODE_FAIL in kinds and NODE_RECOVER in kinds
+
+    def test_single_cell_rejects_link_faults(self):
+        cfg = SimConfig(n_ues=10, sim_time=2.0, seed=0)
+        fs = FaultSpec(link_outages=(LinkOutage(0.5, 1.0),))
+        with pytest.raises(ValueError, match="multi-cell"):
+            simulate(SCHEMES["icc"], cfg, SVC, faults=fs)
+
+
+# ------------------------------------------------------- experiments
+class TestFaultSpecCodec:
+    def test_resilience_spec_round_trips(self):
+        spec = get_experiment("resilience")
+        again = ExperimentSpec.from_json(spec.to_json())
+        assert again == spec
+        arms = {a.name: a for a in spec.resolve_arms()}
+        assert arms["icc/baseline"].faults == FaultSpec()
+        assert arms["icc/node_crash"].faults.node_outages[0].node == "mec"
+        assert arms["mec/backhaul"].faults.link_outages[0].node == "mec"
+
+    def test_v1_golden_still_loads(self):
+        """Schema v2 must keep reading v1 spec files (all new fields
+        default)."""
+        with open("tests/data/network_capacity_spec_v1.json") as f:
+            v1 = f.read()
+        spec = ExperimentSpec.from_json(v1)
+        assert spec == get_experiment("network_capacity")
+        assert SCHEMA_VERSION == 2
+
+    def test_validate_rejects_single_cell_link_faults(self):
+        base = get_experiment("batching_capacity")
+        bad = dataclasses.replace(
+            base, faults=FaultSpec(link_outages=(LinkOutage(1.0, 2.0),)))
+        with pytest.raises(ValueError, match="link"):
+            bad.validate()
+
+
+# ------------------------------------------------------- kv_requeue
+class TestKvRequeueOptIn:
+    @staticmethod
+    def _run_with_kv(n_tokens, nodes, **kw):
+        """Simulate with a KV pool shrunk to `n_tokens` of reservation."""
+        cfg = SimConfig(n_ues=100, sim_time=4.0, seed=3)
+
+        def make():
+            kv = KVCache(LM.hw, LM.model)
+            kv.capacity_bytes = n_tokens * LM.model.kv_bytes_per_token
+            node = BatchedComputeNode(LM, max_batch=8, policy="priority",
+                                      drop_infeasible=True, kv_cache=kv, **kw)
+            nodes.append(node)
+            return node
+
+        return simulate(SCHEMES["icc"], cfg, node_factory=make)
+
+    def test_requeue_relieves_head_of_line(self):
+        """With a KV pool barely over one job, the default node blocks
+        admission at the head (kv_blocked_iterations); kv_requeue=True
+        sends the head to the back instead (bounded, deadline-aware),
+        and job accounting stays conserved."""
+        nodes = []
+        strict = self._run_with_kv(100, nodes)
+        relief = self._run_with_kv(100, nodes, kv_requeue=True)
+        assert nodes[0].stats.kv_blocked_iterations > 0
+        assert nodes[0].stats.kv_requeues == 0
+        assert nodes[1].stats.kv_requeues > 0
+        assert strict.n_jobs == relief.n_jobs
+
+    def test_unservable_job_rejected_even_when_strict(self):
+        """A job whose reservation can never fit alone is kv_reject in
+        either mode — it must not wedge the head of the queue."""
+        nodes = []
+        res = self._run_with_kv(20, nodes)
+        assert (res.drop_reasons or {}).get("kv_reject", 0) > 0
+
+    def test_default_off(self):
+        node = BatchedComputeNode(LM)
+        assert node.kv_requeue is False
+
+
+# ---------------------------------------------- resilient parallel_map
+def _fail_on_odd(x):
+    if x % 2:
+        raise ValueError(f"odd {x}")
+    return x * 10
+
+
+def _sleep_if_negative(x):
+    if x < 0:
+        import time
+
+        time.sleep(30.0)
+    return x * 10
+
+
+class TestResilientParallelMap:
+    def test_retries_must_be_positive(self):
+        with pytest.raises(ValueError):
+            parallel_map(_fail_on_odd, [(1,)], workers=0, task_timeout_s=1.0,
+                         task_retries=0)
+
+    def test_serial_captures_errors(self):
+        got = parallel_map(_fail_on_odd, [(0,), (1,), (2,)], workers=0,
+                           task_timeout_s=5.0, task_retries=2)
+        assert got[0] == 0 and got[2] == 20
+        err = got[1]
+        assert isinstance(err, TaskError)
+        assert err.task_index == 1
+        assert err.error == "ValueError"
+        assert err.attempts == 2
+
+    def test_parallel_captures_errors(self):
+        got = parallel_map(_fail_on_odd, [(0,), (1,), (2,), (3,)], workers=2,
+                           task_timeout_s=30.0, task_retries=2)
+        assert got[0] == 0 and got[2] == 20
+        assert isinstance(got[1], TaskError)
+        assert isinstance(got[3], TaskError)
+        assert got[3].error == "ValueError" and got[3].attempts == 2
+
+    def test_timeout_becomes_structured_error(self):
+        """A wedged task times out, is abandoned, and the rest of the
+        sweep still returns — the CI-hang satellite."""
+        got = parallel_map(_sleep_if_negative, [(1,), (-1,), (2,)],
+                           workers=2, task_timeout_s=1.5, task_retries=1)
+        assert got[0] == 10 and got[2] == 20
+        err = got[1]
+        assert isinstance(err, TaskError)
+        assert err.error == "timeout"
+        assert err.attempts == 1
+
+    def test_no_timeout_path_unchanged(self):
+        tasks = [(x,) for x in range(7)]
+        assert parallel_map(_fail_on_odd, [(0,), (2,), (4,)],
+                            workers=2) == [0, 20, 40]
+        serial = parallel_map(_sleep_if_negative, tasks, workers=0)
+        resilient = parallel_map(_sleep_if_negative, tasks, workers=2,
+                                 task_timeout_s=60.0)
+        assert serial == resilient == [x * 10 for x in range(7)]
