@@ -19,8 +19,14 @@ within 2x untraced, and its Chrome trace is written to
 resilience gate drives the registered ``resilience_quick`` survivability
 grid into ``benchmarks/results/BENCH_resilience_quick.json`` and asserts
 the fault-injection opt-in contract (an empty ``FaultSpec()`` is
-bit-identical to ``faults=None``). Finally
-the report gate renders the quick network sweep into
+bit-identical to ``faults=None``). The run-health gate asserts the
+engine phase profiler is pure (profiled == unprofiled bit for bit),
+telescopes (coverage >= 0.95), and stays within 1.10x unprofiled, then
+re-drives the registered quick network sweep with profile + runlog +
+heartbeats into ``benchmarks/results/runlog_quick.jsonl`` (the CI
+run-health artifact). Finally
+the report gate renders the quick network sweep — with the runlog's
+per-point run-health table folded in — into
 ``benchmarks/results/report_quick.md`` and re-renders every tracked
 ``BENCH_*.json`` baseline twice, failing on any render error or
 byte-level nondeterminism.
@@ -119,6 +125,105 @@ def _telemetry_overhead_check(timings: dict) -> int:
     return 0
 
 
+RUNLOG_QUICK_OUT = "benchmarks/results/runlog_quick.jsonl"  # CI artifact
+# the phase profiler must stay cheap enough to leave on for any
+# diagnostic rerun: a profiled run may cost at most 1.10x unprofiled
+PROFILE_OVERHEAD_FACTOR = 1.10
+
+
+def _runhealth_gate(timings: dict, workers: int) -> int:
+    """Quick-mode run-health gate, three contracts:
+
+    (a) the engine phase profiler observes, never perturbs — a profiled
+        controlled flash-crowd run must be bit-identical to unprofiled
+        (best-of-2 wall-clocks each way, overhead within
+        PROFILE_OVERHEAD_FACTOR with an absolute noise floor);
+    (b) phase attribution must telescope — coverage >= 0.95 of engine
+        wall-clock;
+    (c) the registered ``network_capacity_quick`` sweep, re-run with
+        profile + runlog + heartbeats, must produce a valid
+        RUNLOG_QUICK_OUT (the CI artifact): expected point count,
+        positive durations, a merged profile on every arm.
+    """
+    from repro.experiments import get_experiment, run as run_experiment
+    from repro.experiments.runlog import read_runlog, summarize_runlog
+    from repro.network import SCENARIOS, config_for_load, three_cell_hetero
+    from repro.network.simulator import simulate_network
+    from repro.telemetry import PhaseProfiler
+
+    cfg = config_for_load(
+        three_cell_hetero(), SCENARIOS["flash_crowd"], 60.0,
+        sim_time=6.0, warmup=1.0, seed=0,
+        controller="slack_aware_joint", window_s=1.0,
+    )
+    t_off = float("inf")
+    for _ in range(2):
+        t0 = time.perf_counter()
+        base = simulate_network(cfg, "controlled")
+        t_off = min(t_off, time.perf_counter() - t0)
+    t_on = float("inf")
+    prof_run = None
+    for _ in range(2):
+        t0 = time.perf_counter()
+        prof_run = simulate_network(cfg, "controlled",
+                                    profiler=PhaseProfiler())
+        t_on = min(t_on, time.perf_counter() - t0)
+    timings["profile_off_s"] = round(t_off, 3)
+    timings["profile_on_s"] = round(t_on, 3)
+
+    profile = prof_run.total.profile
+    prof_run.total.profile = None  # compare everything else exactly
+    if base != prof_run:
+        print("[runhealth] FAIL: profiled run diverged from unprofiled "
+              "(the profiler must not perturb the simulation)")
+        return 1
+    coverage = (profile or {}).get("coverage") or 0.0
+    timings["profile_coverage"] = coverage
+    print(f"[runhealth] off={t_off:.2f}s on={t_on:.2f}s "
+          f"({t_on / t_off:.2f}x); coverage={coverage:.4f}")
+    if coverage < 0.95:
+        print(f"[runhealth] ATTRIBUTION GAP: coverage {coverage:.4f} "
+              "< 0.95 — phases no longer telescope over the engine loop")
+        return 1
+    if t_on > PROFILE_OVERHEAD_FACTOR * t_off and t_on - t_off > 0.5:
+        # absolute floor keeps sub-second runs from tripping on noise
+        print(f"[runhealth] OVERHEAD REGRESSION: profiled {t_on:.2f}s > "
+              f"{PROFILE_OVERHEAD_FACTOR:.2f}x unprofiled {t_off:.2f}s")
+        return 1
+
+    # (c) runlog artifact: re-drive the registered quick network sweep
+    # with the full monitoring stack on (the BENCH_network_quick.json
+    # outputs above stay byte-stable because this writes nowhere else)
+    if os.path.exists(RUNLOG_QUICK_OUT):
+        os.remove(RUNLOG_QUICK_OUT)  # appending would double-count runs
+    spec = get_experiment("network_capacity_quick")
+    expected = sum(len(arm.sweep.rates) * arm.sweep.n_seeds
+                   for arm in spec.resolve_arms())
+    result = run_experiment(spec, workers=workers, profile=True,
+                            runlog=RUNLOG_QUICK_OUT, heartbeat_s=2.0)
+    s = summarize_runlog(read_runlog(RUNLOG_QUICK_OUT))
+    timings["runlog_points"] = s["n_points"]
+    problems = []
+    if s["n_points"] != expected:
+        problems.append(f"{s['n_points']} points logged, "
+                        f"expected {expected}")
+    if any(not p["duration_s"] or p["duration_s"] <= 0.0
+           for p in s["points"]):
+        problems.append("non-positive point duration")
+    unprofiled = [a.name for a in result.arms if not a.profile]
+    if unprofiled:
+        problems.append(f"arms missing merged profiles: {unprofiled}")
+    if problems:
+        print("[runhealth] RUNLOG FAIL: " + "; ".join(problems))
+        return 1
+    rss = s["peak_rss_mb"]
+    print(f"[runhealth] runlog -> {RUNLOG_QUICK_OUT} "
+          f"({s['n_points']} points, {s['n_heartbeats']} heartbeats, "
+          f"{s['task_seconds']:.1f} task-s"
+          + (f", peak RSS {rss:.0f} MB" if rss is not None else "") + ")")
+    return 0
+
+
 REPORT_QUICK_OUT = "benchmarks/results/report_quick.md"  # CI artifact
 
 
@@ -133,7 +238,11 @@ def _report_smoke() -> int:
     rc = 0
     quick_src = "benchmarks/results/BENCH_network_quick.json"
     if os.path.exists(quick_src):
-        md = generate_report(quick_src)
+        # fold the run-health gate's runlog into the artifact report so
+        # CI surfaces per-point durations/RSS next to the capacity tables
+        runlog = (RUNLOG_QUICK_OUT
+                  if os.path.exists(RUNLOG_QUICK_OUT) else None)
+        md = generate_report(quick_src, runlog_path=runlog)
         with open(REPORT_QUICK_OUT, "w") as f:
             f.write(md)
         print(f"[report] {quick_src} -> {REPORT_QUICK_OUT} "
@@ -331,6 +440,9 @@ def main(quick: bool = False, workers: int = -1) -> int:
         # injected: empty FaultSpec() == faults=None, bit for bit
         fid = resilience.empty_faultspec_identity_check()
         trc = _telemetry_overhead_check(timings)
+        # run-health before the perf write so its timings land in the
+        # file, and before the report so the runlog artifact exists
+        rh = _runhealth_gate(timings, workers)
         rc = _check_perf_quick(timings)
         # the tracked BENCH_* baselines must keep parsing against the
         # unified ExperimentResult schema (repro.experiments.validate)
@@ -342,7 +454,7 @@ def main(quick: bool = False, workers: int = -1) -> int:
         if not problems:
             print("[validate-bench] tracked baselines OK")
         rep = _report_smoke()
-        return fid or trc or rc or rep or (1 if problems else 0)
+        return fid or trc or rh or rc or rep or (1 if problems else 0)
     return 0
 
 

@@ -40,6 +40,7 @@ import dataclasses
 import heapq
 import itertools
 import math
+from time import perf_counter
 from typing import List, Literal, Optional, Tuple
 
 from ..core.latency_model import LatencyModel
@@ -127,6 +128,9 @@ class BatchedComputeNode:
         # here; every event site is behind a single None-check
         self.recorder = None
         self.telemetry_name = "node"
+        # host phase profiler (repro.telemetry.profile): drivers wire an
+        # active profiler here; the admission path self-times through it
+        self.profiler = None
         # fault injection (repro.faults): optional brownout hook mapping
         # iteration start time -> latency multiplier; None = nominal speed
         self.speed_scale = None
@@ -299,13 +303,20 @@ class BatchedComputeNode:
         the next iteration boundary.
         """
         rec = self.recorder
+        prof = self.profiler
         while self.busy_until <= now and (self._running or self._heap):
             t = self.busy_until
             if not self._running:
                 # idle: the next iteration starts when the head job arrives
                 t = max(t, self._heap[0][2].t_compute_arrival)
-            self._preempt_expired(t)
-            self._admit(t)
+            if prof is not None:
+                t0 = perf_counter()
+                self._preempt_expired(t)
+                self._admit(t)
+                prof.add_sub("batch_admission", perf_counter() - t0)
+            else:
+                self._preempt_expired(t)
+                self._admit(t)
             # zero-output jobs are done the moment prefill is (t equals the
             # end of their last prefill iteration): no decode pass, no
             # t_first_token — matching ComputeNode's prefill-only latency

@@ -167,6 +167,10 @@ class UplinkChannel:
         self._scalar_resume = max(1, scalar_cutoff // 2)  # hysteresis
         self._resume_check = 0  # slots until the next switch-down check
         self.array_mode_switches = 0  # diagnostics (tests assert coverage)
+        # per-mode stepped-slot counts (phase-profiler diagnostics: how
+        # many draining slots ran the scalar replica vs the array path)
+        self.scalar_slots = 0
+        self.array_slots = 0
         # controller-set per-UE PRB weights for the prioritized job split
         # (None = the original equal split, the bit-exact default path)
         self._job_w: Optional[np.ndarray] = None
@@ -369,9 +373,11 @@ class UplinkChannel:
             if not ready:
                 return _NO_DRAIN
             if self._job_w is None and len(ready) <= self._scalar_cutoff:
+                self.scalar_slots += 1
                 return self._step_scalar(now, prioritize_jobs)
             self._to_array_mode()
             self._resume_check = 16
+        self.array_slots += 1
         drained = self._step_arrays(now, prioritize_jobs)
         # switch-down probe every 16 slots: the check costs two array
         # reductions, and hysteresis makes its timing a pure perf knob

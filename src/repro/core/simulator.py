@@ -36,7 +36,10 @@ from typing import Callable, Dict, Iterator, List, Literal, Optional
 
 import numpy as np
 
+from time import perf_counter
+
 from ..control.arrivals import ArrivalProcess, BoundArrivals, bind_arrivals
+from ..telemetry.profile import active_profiler
 from ..telemetry.recorder import active as _active_recorder
 from .channel import ChannelConfig, UplinkChannel
 from .latency_model import LatencyModel
@@ -129,6 +132,9 @@ class SimResult:
     # columnar trace (repro.telemetry EventRecorder.to_telemetry), attached
     # only when the run was traced; None on every untraced run
     telemetry: Optional[dict] = None
+    # host wall-clock phase attribution (repro.telemetry.profile), attached
+    # only when the run was profiled; None on every unprofiled run
+    profile: Optional[dict] = None
 
     def row(self) -> str:
         s = (
@@ -200,11 +206,15 @@ class SlotEngine:
         arrivals: Optional[BoundArrivals] = None,
         gate: Optional[Callable[[Job, float], bool]] = None,
         recorder=None,
+        profiler=None,
     ):
         self.sim = sim
         # lifecycle-event recorder (repro.telemetry); normalized so the
         # disabled default costs one None-check at each event site
         self.recorder = _active_recorder(recorder)
+        # host wall-clock phase profiler (repro.telemetry.profile); same
+        # normalized-to-None discipline, read at the sub-phase hook sites
+        self.profiler = active_profiler(profiler)
         self.rng = rng
         self.packet_priority = packet_priority
         self.wireline = wireline
@@ -251,6 +261,7 @@ class SlotEngine:
         self.fast = fast
         self.fast_forward = fast and fast_forward
         self.slots_skipped = 0
+        self.chunks_drawn = 0  # arrival chunk refills (profiler diagnostic)
         # chunked pre-draw state (fast path)
         self._chunk_slots = max(1, chunk_slots)
         self._chunks: collections.deque = collections.deque()
@@ -265,6 +276,8 @@ class SlotEngine:
         generator exactly like L consecutive slots of the legacy
         ``poisson(lam_job, n_ues)`` + ``poisson(lam_bg, n_ues)`` pair.
         """
+        prof = self.profiler
+        t0 = perf_counter() if prof is not None else 0.0
         start = self._drawn
         length = min(self._chunk_slots, self.n_slots - start)
         if length <= 0:
@@ -299,6 +312,9 @@ class SlotEngine:
         ck.any_arrival = counts.any(axis=(1, 2))
         self._chunks.append(ck)
         self._drawn = ck.end
+        self.chunks_drawn += 1
+        if prof is not None:
+            prof.add_sub("arrival_draw", perf_counter() - t0)
 
     def _chunk_for(self, s: int) -> "_ArrivalChunk":
         """The chunk containing slot `s` (slots are consumed monotonically)."""
@@ -510,7 +526,17 @@ class SlotEngine:
                 queue.popleft()
                 self._n_in_flight -= 1
                 j = entry[0]
-                j.t_compute_arrival = t_slot_end + self.wireline(j, t_slot_end)
+                prof = self.profiler
+                if prof is not None:
+                    t0 = perf_counter()
+                    j.t_compute_arrival = (
+                        t_slot_end + self.wireline(j, t_slot_end)
+                    )
+                    prof.add_sub("routing", perf_counter() - t0)
+                else:
+                    j.t_compute_arrival = (
+                        t_slot_end + self.wireline(j, t_slot_end)
+                    )
                 if self.recorder is not None:
                     # route is set by wireline() (the router owns the job
                     # here), so the event carries the routing decision
@@ -527,6 +553,8 @@ class SlotEngine:
     def _deliver_due(self, t_slot_end: float) -> None:
         if not self._wire_queue:
             return
+        prof = self.profiler
+        t0 = perf_counter() if prof is not None else 0.0
         still = []
         nxt = math.inf
         for j in self._wire_queue:
@@ -538,6 +566,8 @@ class SlotEngine:
                     nxt = j.t_compute_arrival
         self._wire_queue = still
         self._wire_next = nxt
+        if prof is not None:
+            prof.add_sub("wire_dispatch", perf_counter() - t0)
 
 
 def score_jobs(
@@ -666,6 +696,7 @@ def simulate(
     controller: "Optional[ControllerLike]" = None,
     recorder=None,
     faults=None,
+    profiler=None,
 ) -> SimResult:
     """Run one slot-stepped simulation and score Def.-1 satisfaction.
 
@@ -696,9 +727,17 @@ def simulate(
     need the multi-cell simulator. None / an empty spec is free —
     fixed-seed results stay bit-identical to the fault-free engine.
 
+    `profiler` (a `repro.telemetry.profile.PhaseProfiler`) attributes the
+    run's host wall-clock to engine phases and attaches the rollup as
+    ``result.profile``. Like the recorder, it is free when off and
+    non-perturbing when on: profiled fixed-seed results are bit-identical
+    to unprofiled apart from the attachment.
+
     ``fast=False`` selects the reference draw-per-slot engine (identical
     fixed-seed results, ~4x slower; kept for equivalence testing).
     """
+    prof = active_profiler(profiler)
+    t_enter = perf_counter() if prof is not None else 0.0
     if (service_time is None) == (node_factory is None):
         raise ValueError("pass exactly one of service_time / node_factory")
     if controller is not None:
@@ -731,7 +770,10 @@ def simulate(
         fast=fast,
         gate=state.gate if state is not None else None,
         recorder=rec,
+        profiler=prof,
     )
+    if prof is not None and hasattr(node, "profiler"):
+        node.profiler = prof  # batched nodes time their admission path
     s, n_slots = 0, engine.n_slots
     # ---------------------------------------------------- fault injection
     # Opt-in (sched stays None otherwise — the loop below is untouched).
@@ -803,10 +845,17 @@ def simulate(
                 if lm is not None else scheme.b_comp
             )
         svc_s = {"node": svc / max(getattr(node, "max_batch", 1), 1)}
+    # phase attribution: laps chain through one carried mark (`tm`), so
+    # consecutive phases tile the loop's timeline with no gaps — loop
+    # bookkeeping lands in the adjacent phase and coverage stays ~100%
+    tm = prof.lap("setup", t_enter) if prof is not None else 0.0
     while s < n_slots:
-        while fevents and fevents[0][0] <= s:
-            _, t_ev, kind, name = fevents.popleft()
-            fault_event(t_ev, kind, name)
+        if fevents and fevents[0][0] <= s:
+            while fevents and fevents[0][0] <= s:
+                _, t_ev, kind, name = fevents.popleft()
+                fault_event(t_ev, kind, name)
+            if prof is not None:
+                tm = prof.lap("faults", tm)
         if ctl is not None and s >= next_epoch:
             now_ep = s * engine.slot
             control_epoch(
@@ -818,6 +867,8 @@ def simulate(
                 ),
             )
             next_epoch += epoch_slots
+            if prof is not None:
+                tm = prof.lap("controller", tm)
         if engine.can_skip():
             # idle-slot fast-forward: jump to the next arrival-process
             # event, clamped at the next controller epoch — and, when
@@ -838,9 +889,18 @@ def simulate(
             if nxt > s:
                 engine.skip_slots(s, min(nxt, n_slots))
                 s = nxt
+                if prof is not None:
+                    tm = prof.lap("fast_forward", tm)
                 continue
+        if prof is not None:
+            # skip-decision + loop bookkeeping since the previous lap
+            tm = prof.lap("driver", tm)
         t_slot_end = engine.step(s)
+        if prof is not None:
+            tm = prof.lap("uplink_step", tm)
         node.run_until(t_slot_end)
+        if prof is not None:
+            tm = prof.lap("compute", tm)
         if rec is not None and s >= next_sample:
             rec.sample("cell0.uplink", t_slot_end, {
                 "backlog_s": engine.uplink_drain_s(),
@@ -852,11 +912,15 @@ def simulate(
                 t_slot_end, {"depth": float(len(node))},
             )
             next_sample = s + sample_stride
+            if prof is not None:
+                tm = prof.lap("probes", tm)
         s += 1
     while fevents:  # recoveries snapped past the last slot (telemetry)
         _, t_ev, kind, name = fevents.popleft()
         fault_event(t_ev, kind, name)
     node.run_until(float("inf"))
+    if prof is not None:
+        tm = prof.lap("compute", tm)  # final drain (+ post-loop recoveries)
     result = score_jobs(
         engine.jobs,
         sim,
@@ -865,6 +929,8 @@ def simulate(
         b_comm=scheme.b_comm,
         b_comp=scheme.b_comp,
     )
+    if prof is not None:
+        tm = prof.lap("scoring", tm)
     if rec is not None and hasattr(rec, "to_telemetry"):
         result.telemetry = rec.to_telemetry(meta={
             "kind": "single_cell",
@@ -873,4 +939,20 @@ def simulate(
             "sim_time": sim.sim_time,
             "n_ues": sim.n_ues,
         })
+        if prof is not None:
+            tm = prof.lap("telemetry_export", tm)
+    if prof is not None:
+        prof.count("slots", n_slots)
+        prof.count("slots_skipped", engine.slots_skipped)
+        prof.count("slots_stepped", n_slots - engine.slots_skipped)
+        prof.count("arrival_chunks", engine.chunks_drawn)
+        ch = engine.channel
+        prof.count("uplink_scalar_slots", ch.scalar_slots)
+        prof.count("uplink_array_slots", ch.array_slots)
+        prof.count("uplink_mode_switches", ch.array_mode_switches)
+        st = getattr(node, "stats", None)
+        if st is not None:  # batched nodes: iteration-level diagnostics
+            prof.count("batch_iterations", st.n_iterations)
+            prof.count("kv_blocked_iterations", st.kv_blocked_iterations)
+        result.profile = prof.to_profile(perf_counter() - t_enter)
     return result

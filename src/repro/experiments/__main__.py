@@ -5,7 +5,10 @@
     python -m repro.experiments run network_capacity --workers -1 \
         --out benchmarks/results/network_capacity_run.json
     python -m repro.experiments run network_capacity --quick
+    python -m repro.experiments run network_capacity --quick \
+        --profile --progress --runlog benchmarks/results/runlog.jsonl
     python -m repro.experiments report BENCH_network.json --format md
+    python -m repro.experiments report run.json --runlog runlog.jsonl
     python -m repro.experiments validate-bench
 
 ``run --quick`` resolves the registered ``<name>_quick`` variant — the
@@ -17,6 +20,7 @@ baselines, which only the full benchmark scripts regenerate).
 from __future__ import annotations
 
 import argparse
+import logging
 import sys
 
 from .registry import get_experiment, list_experiments
@@ -24,10 +28,34 @@ from .runner import run
 from .validate import validate_bench
 
 
+def _configure_logging(args) -> None:
+    """Wire --log-level / -v into the stdlib root logger.
+
+    -v maps to info, -vv to debug; an explicit --log-level wins over
+    counted -v flags. Without either, logging stays at the library
+    default (warnings only) so existing output is byte-unchanged.
+    """
+    level_name = args.log_level
+    if level_name is None and args.verbose:
+        level_name = "debug" if args.verbose >= 2 else "info"
+    if level_name is None:
+        return
+    logging.basicConfig(
+        level=getattr(logging, level_name.upper()),
+        format="%(asctime)s %(name)s %(levelname)s: %(message)s",
+    )
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.experiments", description=__doc__
     )
+    ap.add_argument("--log-level", choices=("debug", "info", "warning",
+                                            "error"), default=None,
+                    help="stdlib logging level for all repro loggers")
+    ap.add_argument("-v", "--verbose", action="count", default=0,
+                    help="-v = info, -vv = debug (shorthand for "
+                         "--log-level)")
     sub = ap.add_subparsers(dest="cmd", required=True)
 
     sub.add_parser("list", help="registered experiment names + arm counts")
@@ -58,6 +86,23 @@ def main(argv=None) -> int:
                        help="probe-sampling interval for --trace "
                             "time-series (default: the recorder's 0.01 s; "
                             "throttles probes only, never job events)")
+    p_run.add_argument("--profile", action="store_true",
+                       help="attribute engine wall-clock to phases "
+                            "(arrivals, uplink, compute, ...); merged "
+                            "per arm and shown in the report's 'where "
+                            "time goes' section")
+    p_run.add_argument("--progress", action="store_true",
+                       help="live single-line sweep status on stderr "
+                            "(TTY only; silent when piped)")
+    p_run.add_argument("--runlog", default=None, metavar="PATH",
+                       help="append one JSON line per lifecycle event "
+                            "(task start/end, heartbeat, retry, error, "
+                            "per-point duration + peak RSS) to this file")
+    p_run.add_argument("--heartbeat", type=float, default=None,
+                       metavar="SECONDS",
+                       help="worker heartbeat interval for --progress/"
+                            "--runlog (default 5; heartbeating points "
+                            "are never killed by the task timeout)")
 
     p_rep = sub.add_parser(
         "report",
@@ -72,6 +117,9 @@ def main(argv=None) -> int:
     p_rep.add_argument("--ref", default=None, metavar="PATH",
                        help="reference result JSON: adds capacity and "
                             "per-rate satisfaction deltas vs it")
+    p_rep.add_argument("--runlog", default=None, metavar="PATH",
+                       help="runlog JSONL from `run --runlog`: adds a "
+                            "per-point duration/RSS table to the report")
 
     p_val = sub.add_parser(
         "validate-bench",
@@ -81,6 +129,7 @@ def main(argv=None) -> int:
                        help="explicit files (default: the tracked baselines)")
 
     args = ap.parse_args(argv)
+    _configure_logging(args)
 
     if args.cmd == "list":
         for name in list_experiments():
@@ -107,8 +156,21 @@ def main(argv=None) -> int:
                 return 2
         result = run(spec, workers=args.workers,
                      trace=args.trace is not None,
-                     sample_every_s=args.sample_every)
+                     sample_every_s=args.sample_every,
+                     profile=args.profile,
+                     progress=args.progress or None,
+                     runlog=args.runlog,
+                     heartbeat_s=args.heartbeat)
         print(result.summary())
+        if args.profile:
+            for a in result.arms:
+                prof = a.profile or {}
+                top = sorted((prof.get("phases") or {}).items(),
+                             key=lambda kv: -kv[1])[:3]
+                if top:
+                    body = ", ".join(f"{k} {v:.2f}s" for k, v in top)
+                    print(f"  [profile] {a.name}: {body}  "
+                          f"(coverage {prof.get('coverage')})")
         if args.out:
             with open(args.out, "w") as f:
                 f.write(result.to_json(points=args.points))
@@ -135,7 +197,8 @@ def main(argv=None) -> int:
         from ..telemetry.report import generate_report
 
         text = generate_report(args.path, fmt=args.format,
-                               ref_path=args.ref)
+                               ref_path=args.ref,
+                               runlog_path=args.runlog)
         if args.out:
             with open(args.out, "w") as f:
                 f.write(text)

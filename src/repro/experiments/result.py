@@ -45,6 +45,15 @@ class PointRun:
     # {"error", "message", "attempts"} when this point could not be
     # computed — `result` is None and seed-means simply skip the point
     error: Optional[Dict[str, object]] = None
+    # peak RSS (MB) of the process that ran this point — a worker-lifetime
+    # high-water mark (ru_maxrss), so readings from a reused worker are
+    # monotone across its points; None when monitoring was off
+    peak_rss_mb: Optional[float] = None
+    # runtime-only monotonic stamps set by the runner (NOT serialized):
+    # arm elapsed wall is max(t_end) - min(t_start) over its points —
+    # CLOCK_MONOTONIC is system-wide on Linux, so worker stamps compare
+    t_start_mono: float = 0.0
+    t_end_mono: float = 0.0
 
 
 @dataclasses.dataclass
@@ -73,10 +82,16 @@ class ArmResult:
     name: str
     curve: CapacityCurve
     points: List[PointResult]
-    # summed simulation wall-clock across this arm's grid points (seconds);
-    # under a process pool this is attributable compute time, so the arm
-    # shares can exceed the experiment's elapsed wall_clock_s
+    # summed per-point task-seconds across this arm's grid (attributable
+    # compute time, added across workers); under a process pool this can
+    # exceed — and must not be confused with — elapsed wall-clock
     wall_clock_s: float = 0.0
+    # true elapsed wall-clock for this arm: last point end minus first
+    # point start (monotonic stamps); 0.0 when the runner didn't stamp
+    elapsed_s: float = 0.0
+    # merged engine-phase profile across this arm's profiled points
+    # (repro.telemetry.profile.merge_profiles); None on unprofiled runs
+    profile: Optional[dict] = None
 
 
 @dataclasses.dataclass
@@ -118,6 +133,10 @@ class ExperimentResult:
                      ),
                      "extras": dict(s.extras),
                      "duration_s": s.duration_s,
+                     # conditional so results written before run-health
+                     # monitoring re-serialize byte-identically
+                     **({"peak_rss_mb": s.peak_rss_mb}
+                        if s.peak_rss_mb is not None else {}),
                      **({"error": dict(s.error)} if s.error else {})}
                     for s in p.seeds
                 ]
@@ -133,6 +152,10 @@ class ExperimentResult:
                     "name": a.name,
                     "curve": dataclasses.asdict(a.curve),
                     "wall_clock_s": a.wall_clock_s,
+                    # conditional (see peak_rss_mb above): pre-PR-9 files
+                    # must re-serialize without these keys
+                    **({"elapsed_s": a.elapsed_s} if a.elapsed_s else {}),
+                    **({"profile": a.profile} if a.profile else {}),
                     "points": (
                         [] if points == "none"
                         else [enc_point(p) for p in a.points]
@@ -164,7 +187,8 @@ class ExperimentResult:
                         PointRun(result=dec_sim(sd["result"]),
                                  extras=dict(sd.get("extras", {})),
                                  duration_s=sd.get("duration_s", 0.0),
-                                 error=sd.get("error"))
+                                 error=sd.get("error"),
+                                 peak_rss_mb=sd.get("peak_rss_mb"))
                         for sd in pd.get("seeds", [])
                     ],
                 )
@@ -177,6 +201,8 @@ class ExperimentResult:
                     points=points,
                     # absent in baselines written before per-arm timing
                     wall_clock_s=ad.get("wall_clock_s", 0.0),
+                    elapsed_s=ad.get("elapsed_s", 0.0),
+                    profile=ad.get("profile"),
                 )
             )
         return cls(
@@ -221,9 +247,14 @@ class ExperimentResult:
         slowest = max(self.arms, key=lambda a: a.wall_clock_s, default=None)
         if slowest is not None and slowest.wall_clock_s > 0.0:
             total = sum(a.wall_clock_s for a in self.arms)
+            elapsed = (
+                f"; {slowest.elapsed_s:.1f}s elapsed"
+                if slowest.elapsed_s > 0.0 else ""
+            )
             lines.append(
                 f"  slowest arm: {slowest.name} "
-                f"({slowest.wall_clock_s:.1f}s of {total:.1f}s sim time)"
+                f"({slowest.wall_clock_s:.1f}s of {total:.1f}s summed "
+                f"task-seconds{elapsed})"
             )
         return "\n".join(lines)
 

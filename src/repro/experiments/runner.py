@@ -32,14 +32,16 @@ seed-mean skips it) instead of hanging or aborting the whole experiment.
 
 from __future__ import annotations
 
+import os
 import time
 from typing import Dict, List, Optional, Union
 
 from ..core.capacity import capacity_from_sweep, mean_over_seeds
 from ..core.channel import ChannelConfig
 from ..core.latency_model import LatencyModel, ModelService
-from ..core.parallel import TaskError, parallel_map
+from ..core.parallel import TaskError, parallel_map, peak_rss_mb
 from ..core.simulator import SimConfig, simulate
+from ..telemetry.profile import merge_profiles
 from .result import (
     ArmResult,
     CapacityCurve,
@@ -61,7 +63,8 @@ __all__ = ["run", "run_point"]
 
 
 def _single_cell_point(
-    arm: ResolvedArm, lam: float, seed_idx: int, recorder=None
+    arm: ResolvedArm, lam: float, seed_idx: int, recorder=None,
+    profiler=None,
 ) -> PointRun:
     sc = resolve_scenario(arm.workload.scenario)
     scheme = resolve_scheme(arm.system.scheme)
@@ -107,7 +110,7 @@ def _single_cell_point(
 
         res = simulate(scheme, cfg, node_factory=factory, fast=sw.fast,
                        controller=arm.control.controller, recorder=recorder,
-                       faults=arm.faults)
+                       faults=arm.faults, profiler=profiler)
         node = holder["node"]
         extras = {
             "avg_batch": round(node.stats.avg_batch(), 2),
@@ -123,13 +126,14 @@ def _single_cell_point(
                            fidelity=arm.system.fidelity or "paper")
         res = simulate(scheme, cfg, svc, fast=sw.fast,
                        controller=arm.control.controller, recorder=recorder,
-                       faults=arm.faults)
+                       faults=arm.faults, profiler=profiler)
         extras = {}
     return PointRun(result=res, extras=extras)
 
 
 def _multi_cell_point(
-    arm: ResolvedArm, lam: float, seed_idx: int, recorder=None
+    arm: ResolvedArm, lam: float, seed_idx: int, recorder=None,
+    profiler=None,
 ) -> PointRun:
     from ..network.simulator import config_for_load, simulate_network
 
@@ -151,7 +155,7 @@ def _multi_cell_point(
         faults=arm.faults,
     )
     net = simulate_network(cfg, arm.system.policy, fast=sw.fast,
-                           recorder=recorder)
+                           recorder=recorder, profiler=profiler)
     extras = {
         "route_share": dict(net.route_share),
         "n_rejected": net.n_rejected,
@@ -171,6 +175,7 @@ def run_point(
     seed_idx: int,
     trace: bool = False,
     sample_every_s: Optional[float] = None,
+    profile: bool = False,
 ) -> PointRun:
     """One (arm, rate, seed) grid point (module-level: picklable).
 
@@ -180,7 +185,14 @@ def run_point(
     pool as a pickle like every other field). Results are otherwise
     bit-identical to an untraced run. ``sample_every_s`` overrides the
     recorder's probe-sampling interval (None keeps the recorder default);
-    it throttles the time-series only — job timelines never move."""
+    it throttles the time-series only — job timelines never move.
+
+    ``profile=True`` runs the point under a fresh
+    `repro.telemetry.profile.PhaseProfiler`; the engine-phase wall-clock
+    attribution rides back on ``PointRun.result.profile`` — like tracing,
+    bit-identical results aside from the attachment. Every point also
+    stamps its peak worker RSS and monotonic start/end (the runner turns
+    those into per-arm elapsed wall-clock)."""
     recorder = None
     if trace:
         from ..telemetry import EventRecorder
@@ -189,14 +201,25 @@ def run_point(
             EventRecorder() if sample_every_s is None
             else EventRecorder(sample_every_s=sample_every_s)
         )
+    profiler = None
+    if profile:
+        from ..telemetry.profile import PhaseProfiler
+
+        profiler = PhaseProfiler()
+    t_start = time.monotonic()
     t0 = time.perf_counter()
     if arm.system.kind == "multi_cell":
-        pr = _multi_cell_point(arm, lam, seed_idx, recorder=recorder)
+        pr = _multi_cell_point(arm, lam, seed_idx, recorder=recorder,
+                               profiler=profiler)
     else:
         if arm.workload.mobility is not None:
             raise ValueError("mobility requires a multi_cell system")
-        pr = _single_cell_point(arm, lam, seed_idx, recorder=recorder)
+        pr = _single_cell_point(arm, lam, seed_idx, recorder=recorder,
+                                profiler=profiler)
     pr.duration_s = round(time.perf_counter() - t0, 4)
+    pr.peak_rss_mb = peak_rss_mb()
+    pr.t_start_mono = t_start
+    pr.t_end_mono = time.monotonic()
     return pr
 
 
@@ -206,6 +229,11 @@ def run(
     chunk: Union[int, str, None] = None,
     trace: bool = False,
     sample_every_s: Optional[float] = None,
+    profile: bool = False,
+    progress: Union[bool, object, None] = None,
+    on_event=None,
+    runlog: Union[str, object, None] = None,
+    heartbeat_s: Optional[float] = None,
 ) -> ExperimentResult:
     """Run every arm of `spec` and return the unified result.
 
@@ -221,21 +249,86 @@ def run(
     Intended for quick/reduced grids; a full sweep holds every point's
     event stream in memory at once. `sample_every_s` tunes the traced
     probe cadence (None = the recorder's default interval).
+
+    Run-health knobs (all runtime-only, like `trace`; none change what
+    the experiment measures):
+
+      profile       run every point under a `PhaseProfiler`: engine-phase
+                    wall-clock attribution on each seed result, merged
+                    per arm onto ``ArmResult.profile``
+      progress      True -> live single-line status on stderr (TTY-aware,
+                    silent when piped); or pass a `SweepProgress`-like
+                    object with handle()/finish()
+      on_event      extra callback receiving every enriched monitor event
+      runlog        path (or open `RunLog`) appending one JSON line per
+                    lifecycle event — see `repro.experiments.runlog`
+      heartbeat_s   worker heartbeat period (default 5s whenever any
+                    monitoring is active); with `SweepSpec.task_timeout_s`
+                    this makes the timeout heartbeat-aware: actively
+                    beating points are never killed as wedged
     """
     spec.validate()
     arms = spec.resolve_arms()
     if workers is None:
         workers = spec.sweep.workers
     tasks = [
-        (arm, float(lam), s, trace, sample_every_s)
+        (arm, float(lam), s, trace, sample_every_s, profile)
         for arm in arms
         for lam in arm.sweep.rates
         for s in range(arm.sweep.n_seeds)
     ]
+    # (arm, rate, seed) labels in task order: monitor events carry only a
+    # task index, the enrichment below makes them human-readable
+    labels = [
+        {"arm": t[0].name, "rate": t[1], "seed": t[2]} for t in tasks
+    ]
+
+    rl = None
+    own_runlog = False
+    if runlog is not None:
+        from .runlog import RunLog
+
+        if isinstance(runlog, (str, bytes, os.PathLike)):
+            rl = RunLog(os.fspath(runlog))
+            own_runlog = True  # we opened it, we close it
+        else:
+            rl = runlog
+    prog = None
+    if progress is not None and progress is not False:
+        if progress is True:
+            from .progress import SweepProgress
+
+            prog = SweepProgress(total=len(tasks))
+        else:
+            prog = progress
+
+    monitor = None
+    if rl is not None or prog is not None or on_event is not None:
+        def monitor(ev: dict) -> None:
+            i = ev.get("task")
+            if isinstance(i, int) and 0 <= i < len(labels):
+                ev = {**ev, **labels[i]}
+            if prog is not None:
+                prog.handle(ev)
+            if rl is not None:
+                rl.task_event(ev)
+            if on_event is not None:
+                on_event(ev)
+    if monitor is not None and heartbeat_s is None:
+        heartbeat_s = 5.0
+
+    if rl is not None:
+        rl.write("run_start", experiment=spec.name,
+                 arms=[a.name for a in arms], n_tasks=len(tasks),
+                 profile=bool(profile) or None, trace=bool(trace) or None)
+
     t0 = time.perf_counter()
     flat = parallel_map(run_point, tasks, workers=workers, chunk=chunk,
-                        task_timeout_s=spec.sweep.task_timeout_s)
+                        task_timeout_s=spec.sweep.task_timeout_s,
+                        monitor=monitor, heartbeat_s=heartbeat_s)
     wall = time.perf_counter() - t0
+    if prog is not None:
+        prog.finish()
     # resilient sweeps (SweepSpec.task_timeout_s): a point that timed out
     # or kept raising comes back as a TaskError — keep it as a structured
     # error on its PointRun so the sweep reports every point it *could*
@@ -271,18 +364,76 @@ def run(
             saturated=all(s >= alpha for s in sats),
             alpha=alpha,
         )
+        seeds_flat = [s for p in points for s in p.seeds]
+        stamped = [s for s in seeds_flat if s.t_end_mono > 0.0]
+        profiles = [
+            s.result.profile for s in seeds_flat
+            if s.result is not None and s.result.profile
+        ]
         out.append(ArmResult(
             name=arm.name,
             curve=curve,
             points=points,
+            # summed task-seconds (attributable compute across workers)…
             wall_clock_s=round(
-                sum(s.duration_s for p in points for s in p.seeds), 2
+                sum(s.duration_s for s in seeds_flat), 2
             ),
+            # …vs true elapsed wall for the arm (first start -> last end)
+            elapsed_s=round(
+                max(s.t_end_mono for s in stamped)
+                - min(s.t_start_mono for s in stamped), 2
+            ) if stamped else 0.0,
+            profile=merge_profiles(profiles),
         ))
     assert cursor == len(flat)
-    return ExperimentResult(
+    result = ExperimentResult(
         experiment=spec.name,
         spec=spec,
         arms=out,
         wall_clock_s=round(wall, 2),
+    )
+    if rl is not None:
+        _log_run_summary(rl, result)
+        if own_runlog:
+            rl.close()
+    return result
+
+
+def _log_run_summary(rl, result: ExperimentResult) -> None:
+    """Append the post-sweep summary events: one ``point`` record per
+    (arm, rate, seed) with duration/RSS/profile summary, one ``arm_end``
+    per arm, and a final ``run_end`` — the records `summarize_runlog`
+    and the report's "where time goes" miner consume."""
+    n_errors = 0
+    for a in result.arms:
+        for p in a.points:
+            for k, srun in enumerate(p.seeds):
+                prof = (
+                    srun.result.profile if srun.result is not None else None
+                )
+                if srun.error is not None:
+                    n_errors += 1
+                rl.write(
+                    "point", arm=a.name, rate=p.rate, seed=k,
+                    duration_s=srun.duration_s,
+                    peak_rss_mb=srun.peak_rss_mb,
+                    error=(srun.error or {}).get("error"),
+                    profile=(
+                        {
+                            "total_s": prof.get("total_s"),
+                            "coverage": prof.get("coverage"),
+                            "phases": prof.get("phases"),
+                        } if prof else None
+                    ),
+                )
+        rl.write(
+            "arm_end", arm=a.name, capacity=a.curve.capacity,
+            saturated=a.curve.saturated, task_seconds=a.wall_clock_s,
+            elapsed_s=a.elapsed_s or None,
+        )
+    rl.write(
+        "run_end", experiment=result.experiment,
+        wall_clock_s=result.wall_clock_s,
+        n_points=sum(len(p.seeds) for a in result.arms for p in a.points),
+        n_errors=n_errors,
     )

@@ -29,6 +29,7 @@ import dataclasses
 import heapq
 import itertools
 import math
+from time import perf_counter
 from typing import Dict, List, Optional, Union
 
 import numpy as np
@@ -46,6 +47,7 @@ from ..core.scheduler import Job
 from ..core.simulator import SimConfig, SimResult, SlotEngine, score_jobs
 from ..faults import FaultSpec, bind_faults
 from ..faults.schedule import NODE_FAIL, NODE_RECOVER
+from ..telemetry.profile import active_profiler
 from ..telemetry.recorder import active as _active_recorder
 from .routing import RoutingPolicy, get_policy
 from .scenarios import SCENARIOS, Scenario
@@ -154,6 +156,7 @@ def simulate_network(
     policy: Union[str, RoutingPolicy],
     fast: bool = True,
     recorder=None,
+    profiler=None,
     _debug_engines: Optional[list] = None,
 ) -> NetResult:
     """Run one multi-cell simulation under `policy` and score Def. 1.
@@ -166,7 +169,14 @@ def simulate_network(
     (None / NullRecorder) is free — traced and untraced runs are
     bit-identical apart from the attachment. `_debug_engines`,
     when a list, receives the per-cell SlotEngines after the run (tests
-    assert job-conservation invariants on the raw timelines)."""
+    assert job-conservation invariants on the raw timelines).
+
+    `profiler` (a `repro.telemetry.profile.PhaseProfiler`) attributes the
+    run's host wall-clock to engine phases across every cell and node;
+    the rollup attaches as ``result.total.profile``. Free when off,
+    non-perturbing when on (fixed-seed bit-identity)."""
+    prof = active_profiler(profiler)
+    t_enter = perf_counter() if prof is not None else 0.0
     rec = _active_recorder(recorder)
     sc = cfg.scenario
     topo = Topology(
@@ -379,9 +389,14 @@ def simulate_network(
                 ),
                 gate=state.gate if state is not None else None,
                 recorder=rec,
+                profiler=prof,
             )
         )
     assert all(e.n_slots == n_slots for e in engines)
+    if prof is not None:
+        for fn in topo.nodes.values():
+            if hasattr(fn.node, "profiler"):
+                fn.node.profiler = prof  # batched admission self-timing
 
     roamer_cell: Dict[int, int] = {}
     if mob is not None:
@@ -408,7 +423,11 @@ def simulate_network(
             1, int(round(getattr(rec, "sample_every_s", 0.01) / slot))
         )
     s = 0
+    # phase laps chain through one carried mark (see core.simulate): each
+    # lap starts where the previous ended, so attribution telescopes
+    tm = prof.lap("setup", t_enter) if prof is not None else 0.0
     while s < n_slots:
+        had_events = prof is not None and bool(events) and events[0][0] <= s
         while events and events[0][0] <= s:
             _, _, kind, ev = heapq.heappop(events)
             now = s * slot
@@ -442,6 +461,8 @@ def simulate_network(
                 )
             else:  # fault machinery (crash/recover/retry/re-deliver)
                 handle_fault_event(kind, ev)
+        if had_events:
+            tm = prof.lap("events", tm)
         if ctl is not None and s >= next_epoch:
             now_ep = s * slot
             control_epoch(
@@ -454,6 +475,8 @@ def simulate_network(
                 ),
             )
             next_epoch += epoch_slots
+            if prof is not None:
+                tm = prof.lap("controller", tm)
         if all(e.can_skip() for e in engines):
             # every cell idle: fast-forward to the earliest arrival-process
             # event anywhere, clamped at driver events and controller
@@ -470,12 +493,21 @@ def simulate_network(
                 for e in engines:
                     e.skip_slots(s, min(nxt, n_slots))
                 s = nxt
+                if prof is not None:
+                    tm = prof.lap("fast_forward", tm)
                 continue
+        if prof is not None:
+            # skip-decision + loop bookkeeping since the previous lap
+            tm = prof.lap("driver", tm)
         t_slot_end = 0.0
         for e in engines:
             t_slot_end = e.step(s)
+        if prof is not None:
+            tm = prof.lap("uplink_step", tm)
         for fn in nodes:
             fn.node.run_until(t_slot_end)
+        if prof is not None:
+            tm = prof.lap("compute", tm)
         if rec is not None and s >= next_sample:
             for i, e in enumerate(engines):
                 rec.sample(f"cell{i}.uplink", t_slot_end, {
@@ -489,6 +521,8 @@ def simulate_network(
                     "in_transit": float(fn.in_transit),
                 })
             next_sample = s + sample_stride
+            if prof is not None:
+                tm = prof.lap("probes", tm)
         s += 1
     # drain fault-machinery events scheduled past the last slot (late
     # recoveries, retries/re-deliveries near sim end) so every job still
@@ -499,6 +533,8 @@ def simulate_network(
         handle_fault_event(kind, ev)
     for fn in nodes:
         fn.node.run_until(float("inf"))
+    if prof is not None:
+        tm = prof.lap("compute", tm)  # final drain (+ post-loop events)
 
     # ------------------------------------------------------------- scoring
     if _debug_engines is not None:
@@ -515,6 +551,8 @@ def simulate_network(
     counts = collections.Counter(j.route for j in all_jobs if j.route)
     n_routed = max(sum(counts.values()), 1)
     share = {k: v / n_routed for k, v in counts.items()}
+    if prof is not None:
+        tm = prof.lap("scoring", tm)
     if rec is not None and hasattr(rec, "to_telemetry"):
         total.telemetry = rec.to_telemetry(meta={
             "kind": "network",
@@ -526,6 +564,36 @@ def simulate_network(
             "nodes": [fn.name for fn in nodes],
             "controller": ctl.name if ctl is not None else None,
         })
+        if prof is not None:
+            tm = prof.lap("telemetry_export", tm)
+    if prof is not None:
+        prof.count("cells", len(engines))
+        prof.count("slots", n_slots)
+        prof.count("slots_skipped", sum(e.slots_skipped for e in engines))
+        prof.count(
+            "slots_stepped",
+            n_slots * len(engines) - sum(e.slots_skipped for e in engines),
+        )
+        prof.count("arrival_chunks", sum(e.chunks_drawn for e in engines))
+        prof.count(
+            "uplink_scalar_slots",
+            sum(e.channel.scalar_slots for e in engines),
+        )
+        prof.count(
+            "uplink_array_slots",
+            sum(e.channel.array_slots for e in engines),
+        )
+        prof.count(
+            "uplink_mode_switches",
+            sum(e.channel.array_mode_switches for e in engines),
+        )
+        for fn in nodes:
+            st = getattr(fn.node, "stats", None)
+            if st is not None:  # batched fleet nodes
+                prof.count("batch_iterations", st.n_iterations)
+                prof.count("kv_blocked_iterations",
+                           st.kv_blocked_iterations)
+        total.profile = prof.to_profile(perf_counter() - t_enter)
     return NetResult(
         policy=pol.name,
         total=total,

@@ -16,6 +16,12 @@ On top of the raw capture sit three read-only consumers:
     reports from stored `ExperimentResult` / ``BENCH_*.json`` files
     (``python -m repro.experiments report``);
   * `repro.telemetry.chrome` — Perfetto-loadable Chrome traces.
+
+`repro.telemetry.profile` turns the lens on the simulator itself: an
+opt-in `PhaseProfiler` (``profiler=`` / ``run --profile``) attributes
+*host* wall-clock to engine phases — arrivals, uplink stepping, routing,
+compute advance, controller epochs, scoring — under the same free-when-off
+and bit-identical-when-on contracts as the recorder.
 """
 
 from .recorder import (
@@ -34,9 +40,19 @@ from .metrics import (
     stage_percentiles,
     summarize,
 )
+from .profile import (
+    PROFILE_SCHEMA,
+    PhaseProfiler,
+    active_profiler,
+    merge_profiles,
+)
 from .report import generate_report, render_report
 
 __all__ = [
+    "PROFILE_SCHEMA",
+    "PhaseProfiler",
+    "active_profiler",
+    "merge_profiles",
     "STAGE_FIELDS",
     "TELEMETRY_SCHEMA",
     "TraceRecorder",

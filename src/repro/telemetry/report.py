@@ -19,7 +19,12 @@ Sections (each present only when the stored result carries the data):
   * per-arm stage-attribution tables when a traced point telemetry dict
     is stored (``run --trace`` / ``points="full"``), via
     `repro.telemetry.metrics.stage_percentiles`,
-  * wall-clock attribution (slowest arm / per-arm sim time),
+  * "where time goes" — per-arm summed task-seconds vs elapsed wall,
+    merged engine-phase profiles (``run --profile``) with coverage,
+    sub-phase and counter readouts,
+  * a run-health section mined from a ``run --runlog`` JSONL
+    (``report --runlog``): per-point durations, peak worker RSS,
+    errors/retries/heartbeats, and a phase rollup,
   * deltas against a reference result (``--ref``): capacity and per-rate
     satisfaction changes over the arms the two results share.
 
@@ -76,9 +81,12 @@ def build_blocks(
     source: Optional[str] = None,
     ref=None,
     ref_source: Optional[str] = None,
+    runlog: Optional[List[dict]] = None,
+    runlog_source: Optional[str] = None,
 ) -> List[Block]:
     """Assemble the report IR from an `ExperimentResult` (+ optional
-    tracked-baseline headline and reference result for deltas)."""
+    tracked-baseline headline, reference result for deltas, and parsed
+    runlog events for the per-point run-health table)."""
     blocks: List[Block] = []
     blocks.append(("h", 1, f"Capacity report: {result.experiment}"))
     src = f"`{source}`" if source else "an in-memory result"
@@ -282,28 +290,131 @@ def build_blocks(
                     ],
                 ))
 
-    # -------------------------------------------------------- wall clock
+    # --------------------------------------------------- where time goes
     timed = [a for a in result.arms if a.wall_clock_s > 0.0]
     if timed:
-        blocks.append(("h", 2, "Wall clock"))
+        blocks.append(("h", 2, "Where time goes"))
         total = sum(a.wall_clock_s for a in timed)
         slowest = max(timed, key=lambda a: a.wall_clock_s)
         blocks.append((
             "p",
             f"Slowest arm: **{slowest.name}** "
-            f"({_f(slowest.wall_clock_s, 1)} s of {_f(total, 1)} s total "
-            "attributable sim time).",
+            f"({_f(slowest.wall_clock_s, 1)} s of {_f(total, 1)} s summed "
+            "task-seconds; under a process pool summed task-seconds "
+            "exceed elapsed wall-clock).",
         ))
         blocks.append((
             "table",
-            ["arm", "sim time (s)", "share"],
+            ["arm", "task-seconds (s)", "share", "elapsed wall (s)"],
             [
                 [a.name, _f(a.wall_clock_s, 1),
-                 _f(a.wall_clock_s / total if total else None, 2)]
+                 _f(a.wall_clock_s / total if total else None, 2),
+                 _f(a.elapsed_s, 1) if a.elapsed_s > 0.0 else "-"]
                 for a in sorted(
                     timed, key=lambda a: (-a.wall_clock_s, a.name)
                 )
             ],
+        ))
+    for a in result.arms:
+        prof = a.profile or {}
+        phases = prof.get("phases") or {}
+        if not phases:
+            continue
+        blocks.append(("h", 3, f"Engine phases: {a.name}"))
+        attributed = prof.get("attributed_s")
+        blocks.append((
+            "p",
+            f"Phase attribution over {prof.get('n_runs', '?')} profiled "
+            f"runs: {_f(attributed, 2)} s of {_f(prof.get('total_s'), 2)} "
+            f"s engine wall attributed (coverage "
+            f"{_f(prof.get('coverage'), 3)}).",
+        ))
+        phase_total = sum(phases.values()) or None
+        blocks.append((
+            "table",
+            ["phase", "time (s)", "share"],
+            [
+                [name, _f(t, 3),
+                 _f(t / phase_total if phase_total else None, 3)]
+                for name, t in sorted(
+                    phases.items(), key=lambda kv: (-kv[1], kv[0])
+                )
+            ],
+        ))
+        sub = prof.get("sub") or {}
+        if sub:
+            blocks.append((
+                "p",
+                "Sub-phases (inside phases above, not additive): "
+                + ", ".join(f"{k}={_f(v, 3)}s"
+                            for k, v in sorted(sub.items())) + ".",
+            ))
+        counters = prof.get("counters") or {}
+        if counters:
+            blocks.append((
+                "p",
+                "Counters: " + ", ".join(
+                    f"{k}={v}" for k, v in sorted(counters.items())
+                ) + ".",
+            ))
+    if runlog:
+        blocks.extend(_runlog_blocks(runlog, runlog_source))
+    return blocks
+
+
+_RUNLOG_POINT_CAP = 40
+
+
+def _runlog_blocks(events: List[dict],
+                   source: Optional[str] = None) -> List[Block]:
+    """Render a parsed runlog (see `experiments.runlog`) into report IR:
+    summary paragraph, slowest-first per-point table, phase rollup."""
+    from ..experiments.runlog import summarize_runlog
+
+    s = summarize_runlog(events)
+    blocks: List[Block] = [("h", 2, "Run log")]
+    src = f"`{source}`" if source else "an in-memory event list"
+    rss = (f", peak worker RSS {_f(s['peak_rss_mb'], 1)} MB"
+           if s["peak_rss_mb"] is not None else "")
+    blocks.append((
+        "p",
+        f"Mined from {src}: {s['n_runs']} runs, {s['n_points']} points "
+        f"({s['n_errors']} errors, {s['n_retries']} retries, "
+        f"{s['n_heartbeats']} heartbeats), "
+        f"{_f(s['task_seconds'], 1)} summed task-seconds{rss}.",
+    ))
+    pts = sorted(
+        s["points"],
+        key=lambda p: (-(p["duration_s"] or 0.0), str(p["arm"]),
+                       p["rate"] or 0.0, p["seed"] or 0),
+    )
+    shown = pts[:_RUNLOG_POINT_CAP]
+    if shown:
+        blocks.append((
+            "table",
+            ["arm", "rate", "seed", "duration (s)", "peak RSS (MB)",
+             "error"],
+            [
+                [str(p["arm"] or "-"),
+                 f"{p['rate']:g}" if p["rate"] is not None else "-",
+                 str(p["seed"]) if p["seed"] is not None else "-",
+                 _f(p["duration_s"], 2),
+                 _f(p["peak_rss_mb"], 1),
+                 str((p["error"] or {}).get("error", "")) or "-"]
+                for p in shown
+            ],
+        ))
+        if len(pts) > len(shown):
+            blocks.append((
+                "p",
+                f"Slowest {len(shown)} of {len(pts)} points shown.",
+            ))
+    if s["phases"]:
+        blocks.append((
+            "p",
+            "Engine phases summed across logged points: " + ", ".join(
+                f"{k}={_f(v, 3)}s" for k, v in sorted(s["phases"].items())
+            ) + ".",
         ))
     return blocks
 
@@ -392,29 +503,43 @@ def render_report(
     source: Optional[str] = None,
     ref=None,
     ref_source: Optional[str] = None,
+    runlog: Optional[List[dict]] = None,
+    runlog_source: Optional[str] = None,
 ) -> str:
     """Render an in-memory `ExperimentResult` to md/html text."""
     return render_blocks(
         build_blocks(result, headline=headline, source=source, ref=ref,
-                     ref_source=ref_source),
+                     ref_source=ref_source, runlog=runlog,
+                     runlog_source=runlog_source),
         fmt=fmt,
     )
 
 
 def generate_report(
-    path: str, fmt: str = "md", ref_path: Optional[str] = None
+    path: str,
+    fmt: str = "md",
+    ref_path: Optional[str] = None,
+    runlog_path: Optional[str] = None,
 ) -> str:
     """Render a stored result file (raw `ExperimentResult` JSON or a
     tracked ``BENCH_*.json`` wrapper) to md/html text — offline and
-    deterministic: the same file renders byte-identically every time."""
+    deterministic: the same file renders byte-identically every time.
+    ``runlog_path`` (a ``run --runlog`` JSONL) adds the per-point
+    run-health table."""
     from ..experiments.result import load_result
+    from ..experiments.runlog import read_runlog
 
     result, headline = load_result(path)
     ref = ref_src = None
     if ref_path:
         ref, _ = load_result(ref_path)
         ref_src = os.path.basename(ref_path)
+    runlog = runlog_src = None
+    if runlog_path:
+        runlog = read_runlog(runlog_path)
+        runlog_src = os.path.basename(runlog_path)
     return render_report(
         result, headline=headline, fmt=fmt,
         source=os.path.basename(path), ref=ref, ref_source=ref_src,
+        runlog=runlog, runlog_source=runlog_src,
     )

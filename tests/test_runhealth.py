@@ -1,0 +1,458 @@
+"""Run-health observability: profiler purity, progress, runlogs.
+
+Four contracts pin the PR 9 observability layer:
+
+  1. **The phase profiler is free and pure**: with ``profiler=None`` (the
+     default) the engines pay one pointer comparison per phase; with a
+     live `PhaseProfiler` the results are *bit-identical* — the profiler
+     reads `perf_counter()` and increments counters, it never draws RNG
+     or touches sim state. Checked across {classic, batched} x
+     {single-cell, network} plus controlled and faulted runs.
+  2. **Attribution telescopes**: phase laps chain off one carried mark,
+     so summed phase time covers >= 95% of engine wall-clock (measured
+     ~1.0) and the slot counters are self-consistent.
+  3. **Monitoring observes, never perturbs**: `parallel_map` results are
+     identical with monitoring on or off, heartbeating tasks survive
+     the resilient timeout, and only silent workers trip it.
+  4. **Runlogs round-trip**: every lifecycle event lands as one JSON
+     line; a torn final line (killed run) is tolerated, corruption
+     anywhere else raises.
+"""
+
+import dataclasses
+import io
+import json
+import math
+import os
+import time
+
+import pytest
+
+from repro.batching import BatchedComputeNode
+from repro.core.latency_model import GH200_NVL2, LLAMA2_7B, LatencyModel, ModelService
+from repro.core.parallel import TaskError, parallel_map, peak_rss_mb
+from repro.core.simulator import SCHEMES, SimConfig, simulate
+from repro.faults import FaultSpec, NodeOutage
+from repro.network import SCENARIOS, simulate_network, three_cell_hetero
+from repro.network.simulator import config_for_load
+from repro.telemetry import PhaseProfiler, active_profiler, merge_profiles
+
+SVC = ModelService(GH200_NVL2.scaled(2), LLAMA2_7B, "paper")
+
+
+def _batched_factory():
+    lm = LatencyModel(GH200_NVL2.scaled(2), LLAMA2_7B, fidelity="extended")
+
+    def factory():
+        return BatchedComputeNode(lm, max_batch=8, policy="priority",
+                                  drop_infeasible=True)
+
+    return factory
+
+
+def _net_cfg(load=70.0, sim_time=6.0, **kw):
+    return config_for_load(
+        three_cell_hetero(), SCENARIOS["ar_translation"], load,
+        sim_time=sim_time, seed=1, **kw,
+    )
+
+
+def assert_results_equal(a, b):
+    """Exact SimResult equality, NaN-aware, ignoring the two attachment
+    fields observability is allowed to populate (telemetry, profile)."""
+    for f in dataclasses.fields(a):
+        if f.name in ("telemetry", "profile"):
+            continue
+        va, vb = getattr(a, f.name), getattr(b, f.name)
+        if isinstance(va, float) and math.isnan(va):
+            assert isinstance(vb, float) and math.isnan(vb), f.name
+        else:
+            assert va == vb, (f.name, va, vb)
+
+
+# ------------------------------------------------------- profiler purity
+class TestProfilerBitIdentity:
+    """Profiled == unprofiled, bit for bit, every engine combination."""
+
+    def test_classic_single_cell(self):
+        cfg = SimConfig(n_ues=60, sim_time=6.0, seed=3)
+        off = simulate(SCHEMES["icc"], cfg, SVC)
+        on = simulate(SCHEMES["icc"], cfg, SVC, profiler=PhaseProfiler())
+        assert_results_equal(off, on)
+        assert off.profile is None and on.profile is not None
+
+    def test_batched_single_cell(self):
+        cfg = SimConfig(n_ues=60, sim_time=6.0, seed=3)
+        off = simulate(SCHEMES["icc"], cfg, node_factory=_batched_factory())
+        on = simulate(SCHEMES["icc"], cfg, node_factory=_batched_factory(),
+                      profiler=PhaseProfiler())
+        assert_results_equal(off, on)
+        # the batched node's admission work is sub-phase attributed
+        assert "batch_admission" in on.profile["sub"]
+        assert on.profile["counters"]["batch_iterations"] > 0
+
+    def test_classic_network(self):
+        off = simulate_network(_net_cfg(), "slack_aware")
+        on = simulate_network(_net_cfg(), "slack_aware",
+                              profiler=PhaseProfiler())
+        assert_results_equal(off.total, on.total)
+        assert off.route_share == on.route_share
+        assert on.total.profile["counters"]["cells"] == 3
+
+    def test_controlled_network(self):
+        cfg = config_for_load(
+            three_cell_hetero(), SCENARIOS["flash_crowd"], 60.0,
+            sim_time=6.0, warmup=1.0, seed=0,
+            controller="slack_aware_joint", window_s=1.0,
+        )
+        off = simulate_network(cfg, "controlled")
+        on = simulate_network(cfg, "controlled", profiler=PhaseProfiler())
+        assert_results_equal(off.total, on.total)
+        assert "controller" in on.total.profile["phases"]
+
+    def test_faulted_single_cell(self):
+        cfg = SimConfig(n_ues=40, sim_time=4.0, seed=3)
+        fs = FaultSpec(node_outages=(NodeOutage("node", 1.5, 2.5),))
+        off = simulate(SCHEMES["icc"], cfg, SVC, faults=fs)
+        on = simulate(SCHEMES["icc"], cfg, SVC, faults=fs,
+                      profiler=PhaseProfiler())
+        assert_results_equal(off, on)
+        # the outage fired, so the fault-drain phase must have been lapped
+        assert "faults" in on.profile["phases"]
+
+    def test_faulted_network(self):
+        fs = FaultSpec(node_outages=(NodeOutage("mec", 1.5, 3.0),))
+        off = simulate_network(_net_cfg(load=50.0, sim_time=4.0, faults=fs),
+                               "slack_aware")
+        on = simulate_network(_net_cfg(load=50.0, sim_time=4.0, faults=fs),
+                              "slack_aware", profiler=PhaseProfiler())
+        assert_results_equal(off.total, on.total)
+        assert "events" in on.total.profile["phases"]
+
+
+class TestProfilerAttribution:
+    def test_single_cell_telescopes(self):
+        prof = PhaseProfiler()
+        res = simulate(SCHEMES["icc"],
+                       SimConfig(n_ues=60, sim_time=6.0, seed=3),
+                       SVC, profiler=prof)
+        p = res.profile
+        assert p["schema"] == 1
+        assert p["coverage"] >= 0.95
+        # phases are rounded to 6 dp independently of the sum
+        assert p["attributed_s"] == pytest.approx(
+            sum(p["phases"].values()), abs=1e-5)
+        c = p["counters"]
+        assert c["slots"] == c["slots_skipped"] + c["slots_stepped"]
+        assert c["uplink_scalar_slots"] + c["uplink_array_slots"] > 0
+        assert c["arrival_chunks"] > 0
+        assert "arrival_draw" in p["sub"]
+        for must in ("setup", "uplink_step", "compute", "scoring"):
+            assert must in p["phases"], must
+
+    def test_network_telescopes(self):
+        prof = PhaseProfiler()
+        res = simulate_network(_net_cfg(), "slack_aware", profiler=prof)
+        p = res.total.profile
+        assert p["coverage"] >= 0.95
+        c = p["counters"]
+        # every cell engine steps or skips each slot exactly once
+        assert c["slots_stepped"] == c["slots"] * c["cells"] - \
+            c["slots_skipped"]
+
+    def test_units(self):
+        assert active_profiler(None) is None
+        prof = PhaseProfiler()
+        assert active_profiler(prof) is prof
+
+        class Disabled(PhaseProfiler):
+            enabled = False
+
+        assert active_profiler(Disabled()) is None
+
+        a = PhaseProfiler()
+        t = a.lap("x", 0.0)
+        assert t > 0.0 and a.phases["x"] == pytest.approx(t)
+        a.add("x", 1.0)
+        a.add_sub("s", 0.25)
+        a.count("n", 3)
+        pa = a.to_profile(total_s=a.phases["x"] / 0.5)
+        assert pa["coverage"] == pytest.approx(0.5, abs=1e-3)
+
+        assert merge_profiles([]) is None
+        assert merge_profiles([None, None]) is None
+        b = PhaseProfiler()
+        b.add("x", 2.0)
+        b.count("n", 1)
+        merged = merge_profiles([pa, None, b.to_profile(2.0)])
+        assert merged["n_runs"] == 2
+        assert merged["phases"]["x"] == pytest.approx(
+            pa["phases"]["x"] + 2.0)
+        assert merged["counters"]["n"] == 4
+
+
+# ---------------------------------------------------- monitored sweeps
+def _slow(seconds, value):
+    time.sleep(seconds)
+    return value
+
+
+def _quick(x):
+    return x * x
+
+
+class TestMonitoredParallelMap:
+    def test_serial_monitored_events(self):
+        events = []
+        out = parallel_map(_quick, [(1,), (2,), (3,)], workers=0,
+                           monitor=events.append)
+        assert out == [1, 4, 9]
+        kinds = [e["kind"] for e in events]
+        assert kinds == ["start", "finish"] * 3
+        assert all(e["pid"] for e in events)
+
+    def test_pooled_monitored_matches_unmonitored(self):
+        tasks = [(i,) for i in range(6)]
+        plain = parallel_map(_quick, tasks, workers=2)
+        events = []
+        mon = parallel_map(_quick, tasks, workers=2, monitor=events.append)
+        assert mon == plain == [i * i for i in range(6)]
+        kinds = [e["kind"] for e in events]
+        assert kinds.count("start") == 6 and kinds.count("finish") == 6
+        assert all(e["duration_s"] >= 0.0 for e in events
+                   if e["kind"] == "finish")
+
+    def test_heartbeating_task_survives_timeout(self):
+        # 1.2 s of work against a 0.4 s timeout: without heartbeats this
+        # would be killed; with them the worker is provably alive
+        out = parallel_map(_slow, [(1.2, "a"), (1.2, "b")], workers=2,
+                           task_timeout_s=0.4, heartbeat_s=0.1)
+        assert out == ["a", "b"]
+
+    def test_silent_task_still_times_out(self):
+        events = []
+        out = parallel_map(_slow, [(30.0, "wedged"), (0.05, "ok")],
+                           workers=2, task_timeout_s=0.3, task_retries=1,
+                           monitor=events.append)
+        assert isinstance(out[0], TaskError)
+        assert out[1] == "ok"
+        assert any(e["kind"] == "task_error" for e in events)
+
+    def test_peak_rss(self):
+        rss = peak_rss_mb()
+        assert rss is not None and 1.0 < rss < 1e6
+
+
+# -------------------------------------------------------------- runlog
+class TestRunLog:
+    def test_round_trip(self, tmp_path):
+        from repro.experiments.runlog import RUNLOG_SCHEMA, RunLog, read_runlog
+
+        path = str(tmp_path / "log.jsonl")
+        with RunLog(path) as rl:
+            rl.write("run_start", experiment="x", n_tasks=2)
+            rl.task_event({"kind": "start", "task": 0, "pid": 1})
+            rl.task_event({"kind": "finish", "task": 0, "pid": 1,
+                           "duration_s": 0.5, "dropped": None})
+            rl.task_event({"kind": "not_a_kind", "task": 0})  # ignored
+            rl.write("run_end", n_points=1)
+        events = read_runlog(path)
+        assert [e["event"] for e in events] == [
+            "run_start", "task_start", "task_end", "run_end"]
+        assert all(e["schema"] == RUNLOG_SCHEMA for e in events)
+        assert all("ts" in e and "t_s" in e for e in events)
+        assert "dropped" not in events[2]  # None fields are elided
+
+    def test_torn_tail_tolerated(self, tmp_path):
+        from repro.experiments.runlog import read_runlog
+
+        path = str(tmp_path / "torn.jsonl")
+        with open(path, "w") as f:
+            f.write('{"event":"run_start","schema":1}\n')
+            f.write('{"event":"task_end","sch')  # killed mid-write
+        events = read_runlog(path)
+        assert len(events) == 1 and events[0]["event"] == "run_start"
+
+    def test_corrupt_middle_raises(self, tmp_path):
+        from repro.experiments.runlog import read_runlog
+
+        path = str(tmp_path / "bad.jsonl")
+        with open(path, "w") as f:
+            f.write('{"event":"run_start","schema":1}\n')
+            f.write("NOT JSON\n")
+            f.write('{"event":"run_end","schema":1}\n')
+        with pytest.raises(ValueError, match="corrupt runlog line"):
+            read_runlog(path)
+
+    def test_summarize(self):
+        from repro.experiments.runlog import summarize_runlog
+
+        events = [
+            {"event": "run_start"},
+            {"event": "heartbeat"},
+            {"event": "task_retry"},
+            {"event": "point", "arm": "b", "rate": 40.0, "seed": 0,
+             "duration_s": 2.0, "peak_rss_mb": 50.0,
+             "profile": {"phases": {"uplink_step": 1.5}}},
+            {"event": "point", "arm": "a", "rate": 40.0, "seed": 0,
+             "duration_s": 1.0, "peak_rss_mb": 60.0,
+             "profile": {"phases": {"uplink_step": 0.5}}},
+            {"event": "point", "arm": "a", "rate": 50.0, "seed": 1,
+             "duration_s": 0.5, "error": {"error": "TaskError"}},
+            {"event": "run_end"},
+        ]
+        s = summarize_runlog(events)
+        assert s["n_runs"] == 1 and s["n_points"] == 3
+        assert s["n_errors"] == 1 and s["n_retries"] == 1
+        assert s["n_heartbeats"] == 1
+        assert s["task_seconds"] == pytest.approx(3.5)
+        assert s["peak_rss_mb"] == 60.0
+        # deterministic arm/rate/seed ordering
+        assert [(p["arm"], p["rate"]) for p in s["points"]] == [
+            ("a", 40.0), ("a", 50.0), ("b", 40.0)]
+        assert s["phases"] == {"uplink_step": 2.0}
+
+
+# ------------------------------------------------------------ progress
+class TestSweepProgress:
+    def test_silent_when_not_a_tty(self):
+        from repro.experiments.progress import SweepProgress
+
+        out = io.StringIO()  # isatty() is False
+        prog = SweepProgress(total=2, out=out)
+        prog.handle({"kind": "start", "task": 0, "pid": 9, "arm": "icc"})
+        prog.handle({"kind": "finish", "task": 0, "pid": 9,
+                     "duration_s": 1.0})
+        prog.finish()
+        assert out.getvalue() == ""
+        assert prog.done == 1  # counting still works while silent
+
+    def test_enabled_rendering_and_counts(self):
+        from repro.experiments.progress import SweepProgress
+
+        out = io.StringIO()
+        t = [0.0]
+        prog = SweepProgress(total=4, out=out, enabled=True,
+                             min_interval_s=0.0, clock=lambda: t[0])
+        prog.handle({"kind": "start", "task": 0, "pid": 1, "arm": "icc"})
+        prog.handle({"kind": "start", "task": 1, "pid": 2, "arm": "mec"})
+        t[0] = 1.0
+        prog.handle({"kind": "finish", "task": 0, "pid": 1,
+                     "duration_s": 1.0})
+        prog.handle({"kind": "attempt_failed", "task": 1, "pid": 2})
+        prog.handle({"kind": "retry", "task": 1})
+        prog.handle({"kind": "start", "task": 1, "pid": 2, "arm": "mec"})
+        t[0] = 2.0
+        prog.handle({"kind": "task_error", "task": 1})
+        prog.finish()
+        text = out.getvalue()
+        assert "[sweep] 2/4 points" in text
+        assert "1 errors" in text and "1 retries" in text
+        assert "eta" in text and "on icc,mec" in text
+        assert text.endswith("\n")
+        assert prog.done == 2 and prog.errors == 1 and prog.retries == 1
+        assert not prog.running
+
+
+# ------------------------------------------- runner + report integration
+def _tiny_spec(name):
+    from repro.experiments import (
+        ExperimentSpec, SweepSpec, SystemSpec, WorkloadSpec,
+    )
+
+    return ExperimentSpec(
+        name=name,
+        workload=WorkloadSpec(scenario="ar_translation"),
+        system=SystemSpec(kind="single_cell", scheme="icc"),
+        sweep=SweepSpec(rates=(30.0, 40.0), n_seeds=2, sim_time=2.0,
+                        warmup=0.5, workers=0),
+    )
+
+
+class TestRunnerIntegration:
+    def test_profile_runlog_progress_end_to_end(self, tmp_path):
+        from repro.experiments import ExperimentResult, run
+        from repro.experiments.progress import SweepProgress
+        from repro.experiments.runlog import read_runlog, summarize_runlog
+
+        path = str(tmp_path / "run.jsonl")
+        out = io.StringIO()
+        prog = SweepProgress(total=4, out=out, enabled=True,
+                             min_interval_s=0.0)
+        res = run(_tiny_spec("tiny_rh"), profile=True, runlog=path,
+                  progress=prog)
+
+        arm = res.arms[0]
+        assert arm.wall_clock_s > 0 and arm.elapsed_s > 0
+        # serial run: elapsed wall >= any single point, <= summed tasks
+        assert arm.elapsed_s <= arm.wall_clock_s * 1.5
+        assert arm.profile["n_runs"] == 4
+        assert arm.profile["coverage"] >= 0.95
+        assert all(s.peak_rss_mb and s.peak_rss_mb > 1.0
+                   for p in arm.points for s in p.seeds)
+        assert "task-seconds" in res.summary()
+
+        # new fields round-trip the serialized schema
+        back = ExperimentResult.from_dict(
+            json.loads(res.to_json(points="full")))
+        assert back.arms[0].elapsed_s == arm.elapsed_s
+        assert back.arms[0].profile == arm.profile
+        assert back.arms[0].points[0].seeds[0].peak_rss_mb == \
+            arm.points[0].seeds[0].peak_rss_mb
+
+        events = read_runlog(path)
+        kinds = {e["event"] for e in events}
+        assert {"run_start", "task_start", "task_end", "point",
+                "arm_end", "run_end"} <= kinds
+        s = summarize_runlog(events)
+        assert s["n_points"] == 4 and s["n_errors"] == 0
+        assert all(p["duration_s"] > 0 for p in s["points"])
+        assert "4/4 points" in out.getvalue()
+
+    def test_unmonitored_results_unchanged(self):
+        # the monitoring stack must not perturb sweep results
+        from repro.experiments import run
+
+        plain = run(_tiny_spec("tiny_rh"))
+        monitored = run(_tiny_spec("tiny_rh"), profile=True)
+        assert plain.arms[0].curve == monitored.arms[0].curve
+        for pp, pm in zip(plain.arms[0].points, monitored.arms[0].points):
+            assert_results_equal(pp.mean, pm.mean)
+
+    def test_pre_pr9_results_serialize_unchanged(self):
+        # results without run-health fields must re-serialize without the
+        # new keys (tracked BENCH baselines stay byte-stable)
+        from repro.experiments import run
+
+        res = run(_tiny_spec("tiny_rh"))
+        d = res.to_dict(points="full")
+        assert "elapsed_s" in d["arms"][0]  # runner always stamps now
+        res.arms[0].elapsed_s = 0.0
+        res.arms[0].profile = None
+        for p in res.arms[0].points:
+            for s in p.seeds:
+                s.peak_rss_mb = None
+        d = res.to_dict(points="full")
+        assert "profile" not in d["arms"][0]
+        assert "elapsed_s" not in d["arms"][0]
+        assert all("peak_rss_mb" not in sd
+                   for pd in d["arms"][0]["points"] for sd in pd["seeds"])
+
+    def test_report_renders_runhealth_sections(self, tmp_path):
+        from repro.experiments import run
+        from repro.experiments.runlog import read_runlog
+        from repro.telemetry.report import render_report
+
+        path = str(tmp_path / "rep.jsonl")
+        res = run(_tiny_spec("tiny_rh"), profile=True, runlog=path)
+        events = read_runlog(path)
+        md = render_report(res, source="x.json", runlog=events,
+                           runlog_source="rep.jsonl")
+        assert "## Where time goes" in md
+        assert "### Engine phases: tiny_rh" in md
+        assert "## Run log" in md
+        assert "uplink_step" in md
+        assert md == render_report(res, source="x.json", runlog=events,
+                                   runlog_source="rep.jsonl")
+        html = render_report(res, fmt="html", runlog=events)
+        assert "<h2>Run log</h2>" in html
