@@ -63,6 +63,100 @@ def _window_stats(windows, spike):
     }
 
 
+def _sections(result):
+    """Render the flash-crowd / diurnal / mobility sections out of an
+    `ExperimentResult` (needs per-seed points for the admission/handover
+    counters). One derivation used by both `run()` and `bench_doc`, so
+    the tracked headline cannot drift from the results report."""
+    sc = SCENARIOS["flash_crowd"]
+    spike = (sc.arrival.t_start, sc.arrival.t_end)
+
+    arms = {}
+    for name in ARMS:
+        point = result.arm(name).points[0]
+        total = point.mean
+        stats = _window_stats(total.windows, spike)
+        arms[name] = {
+            "satisfaction": round(total.satisfaction, 4),
+            "drop_rate": round(total.drop_rate, 4),
+            **{k: round(v, 4) for k, v in stats.items()},
+            "rejected": int(np.mean(
+                [s.extras["n_rejected"] for s in point.seeds]
+            )),
+            "windows": [
+                {k: round(v, 4) if isinstance(v, float) else v
+                 for k, v in w.items()}
+                for w in total.windows
+            ],  # empty windows carry satisfaction=None, excluded above
+        }
+
+    diurnal = {}
+    for name in ("slack_aware", "slack_aware_joint"):
+        point = result.arm(f"diurnal/{name}").points[0]
+        diurnal[name] = {
+            "satisfaction": round(float(np.mean(
+                [s.result.satisfaction for s in point.seeds]
+            )), 4),
+            "rejected": int(np.mean(
+                [s.extras["n_rejected"] for s in point.seeds]
+            )),
+        }
+
+    mobility = {}
+    for name in ("slack_aware", "slack_aware_joint"):
+        point = result.arm(f"mobility/{name}").points[0]
+        mobility[name] = {
+            "satisfaction": round(float(np.mean(
+                [s.result.satisfaction for s in point.seeds]
+            )), 4),
+            "handovers": int(np.mean(
+                [s.extras["n_handovers"] for s in point.seeds]
+            )),
+            "rehomed": int(np.mean(
+                [s.extras["n_rehomed"] for s in point.seeds]
+            )),
+        }
+
+    best_static = max(STATIC_ARMS, key=lambda a: arms[a]["spike_sat"])
+    joint, ref = arms["slack_aware_joint"], arms[best_static]
+    headline = {
+        "joint_vs_best_static_spike": round(
+            joint["spike_sat"] / max(ref["spike_sat"], 1e-9), 3),
+        "joint_vs_best_static_overall": round(
+            joint["satisfaction"] / max(ref["satisfaction"], 1e-9), 3),
+        "joint_recovery_sat": joint["recovery_sat"],
+        "best_static_recovery_sat": ref["recovery_sat"],
+    }
+    return spike, arms, diurnal, mobility, best_static, headline
+
+
+def bench_doc(result) -> dict:
+    """Render an `ExperimentResult` of the control grid into the tracked
+    BENCH_control.json wrapper — pure function of the result, shared
+    with the suite runner (`repro.experiments.suites`)."""
+    spec = result.spec
+    _, arms, diurnal, mobility, _, head = _sections(result)
+    headline = {
+        "spike_sat": {a: arms[a]["spike_sat"] for a in arms},
+        "spike_min_sat": {a: arms[a]["spike_min_sat"] for a in arms},
+        "recovery_sat": {a: arms[a]["recovery_sat"] for a in arms},
+        "satisfaction": {a: arms[a]["satisfaction"] for a in arms},
+        "diurnal": diurnal,
+        "mobility": mobility,
+        "headline": head,
+        "load_jobs_per_s": float(spec.sweep.rates[0]),
+        "sim_time": spec.sweep.sim_time,
+        "n_seeds": spec.sweep.n_seeds,
+        "wall_clock_s": result.wall_clock_s,
+    }
+    return {
+        "schema_version": SCHEMA_VERSION,
+        "experiment": result.experiment,
+        "headline": headline,
+        "result": result.to_dict(points="none"),
+    }
+
+
 def run(
     out_dir: str = "benchmarks/results",
     results_name: str = "control_capacity.json",
@@ -94,109 +188,29 @@ def run(
 
     result = run_experiment(spec, workers=workers)
 
-    # ------------------------------------------------ flash-crowd arms
-    for name in ARMS:
-        point = result.arm(name).points[0]
-        total = point.mean
-        stats = _window_stats(total.windows, spike)
-        out["arms"][name] = {
-            "satisfaction": round(total.satisfaction, 4),
-            "drop_rate": round(total.drop_rate, 4),
-            **{k: round(v, 4) for k, v in stats.items()},
-            "rejected": int(np.mean(
-                [s.extras["n_rejected"] for s in point.seeds]
-            )),
-            "windows": [
-                {k: round(v, 4) if isinstance(v, float) else v
-                 for k, v in w.items()}
-                for w in total.windows
-            ],  # empty windows carry satisfaction=None, excluded above
-        }
-        a = out["arms"][name]
+    _, arms, diurnal, mobility, best_static, headline = _sections(result)
+    out["arms"], out["diurnal"], out["mobility"] = arms, diurnal, mobility
+    out["best_static"], out["headline"] = best_static, headline
+    out["wall_clock_s"] = result.wall_clock_s
+
+    for name, a in arms.items():
         print(f"[control] {name:18s} sat={a['satisfaction']:.3f} "
               f"spike={a['spike_sat']:.3f} min={a['spike_min_sat']:.3f} "
               f"recovery={a['recovery_sat']:.3f} rej={a['rejected']}")
-
-    # ------------------------------------------------ diurnal no-harm
-    for name in ("slack_aware", "slack_aware_joint"):
-        point = result.arm(f"diurnal/{name}").points[0]
-        out["diurnal"][name] = {
-            "satisfaction": round(float(np.mean(
-                [s.result.satisfaction for s in point.seeds]
-            )), 4),
-            "rejected": int(np.mean(
-                [s.extras["n_rejected"] for s in point.seeds]
-            )),
-        }
-        print(f"[control] diurnal {name:18s} "
-              f"sat={out['diurnal'][name]['satisfaction']:.3f}")
-
-    # ------------------------------------------------ mobility exercise
-    for name in ("slack_aware", "slack_aware_joint"):
-        point = result.arm(f"mobility/{name}").points[0]
-        out["mobility"][name] = {
-            "satisfaction": round(float(np.mean(
-                [s.result.satisfaction for s in point.seeds]
-            )), 4),
-            "handovers": int(np.mean(
-                [s.extras["n_handovers"] for s in point.seeds]
-            )),
-            "rehomed": int(np.mean(
-                [s.extras["n_rehomed"] for s in point.seeds]
-            )),
-        }
-        m = out["mobility"][name]
+    for name, d in diurnal.items():
+        print(f"[control] diurnal {name:18s} sat={d['satisfaction']:.3f}")
+    for name, m in mobility.items():
         print(f"[control] mobile  {name:18s} sat={m['satisfaction']:.3f} "
               f"ho={m['handovers']} rehomed={m['rehomed']}")
-
-    # ------------------------------------------------------- headline
-    best_static = max(STATIC_ARMS,
-                      key=lambda a: out["arms"][a]["spike_sat"])
-    joint = out["arms"]["slack_aware_joint"]
-    ref = out["arms"][best_static]
-    out["best_static"] = best_static
-    out["headline"] = {
-        "joint_vs_best_static_spike": round(
-            joint["spike_sat"] / max(ref["spike_sat"], 1e-9), 3),
-        "joint_vs_best_static_overall": round(
-            joint["satisfaction"] / max(ref["satisfaction"], 1e-9), 3),
-        "joint_recovery_sat": joint["recovery_sat"],
-        "best_static_recovery_sat": ref["recovery_sat"],
-    }
-    out["wall_clock_s"] = result.wall_clock_s
 
     os.makedirs(out_dir, exist_ok=True)
     with open(os.path.join(out_dir, results_name), "w") as f:
         json.dump(out, f, indent=1)
-    headline = {
-        "spike_sat": {a: out["arms"][a]["spike_sat"] for a in out["arms"]},
-        "spike_min_sat": {
-            a: out["arms"][a]["spike_min_sat"] for a in out["arms"]
-        },
-        "recovery_sat": {
-            a: out["arms"][a]["recovery_sat"] for a in out["arms"]
-        },
-        "satisfaction": {
-            a: out["arms"][a]["satisfaction"] for a in out["arms"]
-        },
-        "diurnal": out["diurnal"],
-        "mobility": out["mobility"],
-        "headline": out["headline"],
-        "load_jobs_per_s": load,
-        "sim_time": sim_time,
-        "n_seeds": n_seeds,
-        "wall_clock_s": out["wall_clock_s"],
-    }
-    baseline = {
-        "schema_version": SCHEMA_VERSION,
-        "experiment": spec.name,
-        "headline": headline,
-        "result": result.to_dict(points="none"),
-    }
     with open(bench_path, "w") as f:
-        json.dump(baseline, f, indent=1, sort_keys=True)
+        json.dump(bench_doc(result), f, indent=1, sort_keys=True)
+    joint, ref = arms["slack_aware_joint"], arms[best_static]
     print(f"[control] joint vs best static ({best_static}): "
-          f"{out['headline']['joint_vs_best_static_spike']:.2f}x spike-window "
+          f"{headline['joint_vs_best_static_spike']:.2f}x spike-window "
           f"sat, recovery {joint['recovery_sat']:.2f} vs "
           f"{ref['recovery_sat']:.2f} ({out['wall_clock_s']:.0f}s)")
     return out

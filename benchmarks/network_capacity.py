@@ -41,6 +41,36 @@ from repro.experiments import (
 SCENARIO_LOADS: Dict[str, float] = {"chatbot": 20.0, "vision_prompt": 15.0}
 
 
+def bench_doc(result) -> dict:
+    """Render an `ExperimentResult` of the network-capacity grid into the
+    tracked BENCH_network.json wrapper. Pure function of the result (grid
+    parameters come from the spec echo), so the suite runner
+    (`repro.experiments.suites`) regenerates the same document `run()`
+    writes — one formatter, no drift."""
+    spec = result.spec
+    policies = {
+        arm.name: {"capacity": arm.curve.capacity,
+                   "saturated": arm.curve.saturated}
+        for arm in result.arms
+    }
+    headline = {
+        "capacity_per_policy": {
+            p: policies[p]["capacity"] for p in policies
+        },
+        "saturated": {p: policies[p]["saturated"] for p in policies},
+        "sweep_wall_clock_s": result.wall_clock_s,
+        "rates": [float(r) for r in spec.sweep.rates],
+        "sim_time": spec.sweep.sim_time,
+        "n_seeds": spec.sweep.n_seeds,
+    }
+    return {
+        "schema_version": SCHEMA_VERSION,
+        "experiment": result.experiment,
+        "headline": headline,
+        "result": result.to_dict(points="none"),
+    }
+
+
 def run(
     out_dir: str = "benchmarks/results",
     results_name: str = "network_capacity.json",
@@ -116,26 +146,8 @@ def run(
         json.dump(out, f, indent=1)
     # tracked baseline: compact headline numbers + the schema'd result
     # payload (python -m repro.experiments validate-bench checks it)
-    headline = {
-        "capacity_per_policy": {
-            p: out["policies"][p]["capacity"] for p in out["policies"]
-        },
-        "saturated": {
-            p: out["policies"][p]["saturated"] for p in out["policies"]
-        },
-        "sweep_wall_clock_s": out["sweep_wall_clock_s"],
-        "rates": rates,
-        "sim_time": sim_time,
-        "n_seeds": n_seeds,
-    }
-    baseline = {
-        "schema_version": SCHEMA_VERSION,
-        "experiment": spec.name,
-        "headline": headline,
-        "result": result.to_dict(points="none"),
-    }
     with open(bench_path, "w") as f:
-        json.dump(baseline, f, indent=1, sort_keys=True)
+        json.dump(bench_doc(result), f, indent=1, sort_keys=True)
     print(f"[network] best={best}  slack_aware vs mec_only: "
           f"+{out['gain_slack_vs_mec']:.1%}  "
           f"(sweep {out['sweep_wall_clock_s']:.0f}s)")

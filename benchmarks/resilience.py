@@ -90,6 +90,106 @@ def _outage_min_sat(windows, t_fail: float, t_recover: float):
     return min(vals) if vals else None
 
 
+def _fault_window(spec):
+    """(t_fail, t_recover) recovered from the spec's fault arms — the
+    outage window is part of the arm definitions (node_outages /
+    link_outages), so a result round-tripped through the cache still
+    knows when the fault hit."""
+    for arm in spec.resolve_arms():
+        f = arm.faults
+        if f is None:
+            continue
+        for o in tuple(f.node_outages) + tuple(f.link_outages):
+            return float(o.t_fail), float(o.t_recover)
+    raise ValueError(
+        f"spec {spec.name!r} injects no outages; not a resilience grid"
+    )
+
+
+def _sections(result, ref_rate: float = 70.0) -> dict:
+    """Derive the survivability readings from an `ExperimentResult`: the
+    per-arm curves, the satisfaction and outage-window minimum at the
+    grid rate nearest ``ref_rate``, and the retained-fraction matrix.
+    One derivation used by both `run()` and `bench_doc`."""
+    grid = [float(r) for r in result.spec.sweep.rates]
+    ref = min(grid, key=lambda r: abs(r - ref_rate))
+    t_fail, t_recover = _fault_window(result.spec)
+
+    arms: Dict[str, dict] = {}
+    sat_at_ref: Dict[str, float] = {}
+    min_win: Dict[str, Optional[float]] = {}
+    for arm in result.arms:
+        c = arm.curve
+        arms[arm.name] = {
+            "satisfaction": [round(s, 4) for s in c.satisfaction],
+            "capacity": c.capacity,
+            "saturated": c.saturated,
+        }
+        point = next(p for p in arm.points if p.rate == ref)
+        sat_at_ref[arm.name] = point.mean.satisfaction
+        min_win[arm.name] = _outage_min_sat(
+            point.mean.windows, t_fail, t_recover
+        )
+
+    # survivability: fraction of baseline satisfaction retained under
+    # each fault, per stance, at the reference rate
+    retained: Dict[str, Dict[str, float]] = {}
+    for stance in RESILIENCE_ARMS:
+        base = max(sat_at_ref[f"{stance}/baseline"], 1e-9)
+        retained[stance] = {
+            case: round(sat_at_ref[f"{stance}/{case}"] / base, 4)
+            for case in RESILIENCE_FAULT_CASES if case != "baseline"
+        }
+    return {
+        "grid": grid,
+        "ref": ref,
+        "outage": [t_fail, t_recover],
+        "arms": arms,
+        "sat_at_ref": {k: round(v, 4) for k, v in sat_at_ref.items()},
+        "sat_at_ref_raw": sat_at_ref,
+        "outage_min_window_sat": {
+            k: (round(v, 4) if v is not None else None)
+            for k, v in min_win.items()
+        },
+        "retained_at_ref": retained,
+        # the one-number claim: ICC's worst-case retained satisfaction
+        # minus the centralized baseline's, across the injected faults
+        "icc_vs_mec_worst_retained": round(
+            min(retained["icc"].values()) - min(retained["mec"].values()), 4
+        ),
+    }
+
+
+def bench_doc(result, ref_rate: float = 70.0) -> dict:
+    """Render an `ExperimentResult` of the resilience grid into the
+    tracked BENCH_resilience.json wrapper — pure function of the result
+    (grid, outage window, and reference rate all recoverable from the
+    spec echo), shared with the suite runner."""
+    spec = result.spec
+    s = _sections(result, ref_rate=ref_rate)
+    arms = s["arms"]
+    headline = {
+        "capacity_per_arm": {a: arms[a]["capacity"] for a in arms},
+        "saturated": {a: arms[a]["saturated"] for a in arms},
+        "sat_at_ref": s["sat_at_ref"],
+        "retained_at_ref": s["retained_at_ref"],
+        "outage_min_window_sat": s["outage_min_window_sat"],
+        "icc_vs_mec_worst_retained": s["icc_vs_mec_worst_retained"],
+        "ref_rate": s["ref"],
+        "outage": s["outage"],
+        "rates": s["grid"],
+        "sim_time": spec.sweep.sim_time,
+        "n_seeds": spec.sweep.n_seeds,
+        "sweep_wall_clock_s": result.wall_clock_s,
+    }
+    return {
+        "schema_version": SCHEMA_VERSION,
+        "experiment": result.experiment,
+        "headline": headline,
+        "result": result.to_dict(points="none"),
+    }
+
+
 def run(
     out_dir: str = "benchmarks/results",
     results_name: str = "resilience.json",
@@ -109,90 +209,39 @@ def run(
         rates=rates, sim_time=sim_time, warmup=warmup, n_seeds=n_seeds,
         t_fail=t_fail, t_recover=t_recover, alpha=alpha, name=name,
     )
-    grid = [float(r) for r in spec.sweep.rates]
-    # headline readings anchor at the grid rate closest to `ref_rate`
-    ref = min(grid, key=lambda r: abs(r - ref_rate))
-
     result = run_experiment(spec, workers=workers)
 
+    s = _sections(result, ref_rate=ref_rate)
+    ref = s["ref"]
     out: dict = {
-        "rates": grid,
+        "rates": s["grid"],
         "alpha": alpha,
         "sim_time": sim_time,
-        "outage": [t_fail, t_recover],
+        "outage": s["outage"],
         "n_seeds": n_seeds,
         "ref_rate": ref,
         "topology": "three_cell_hetero",
-        "arms": {},
+        "arms": s["arms"],
+        "retained_at_ref": s["retained_at_ref"],
+        "sat_at_ref": s["sat_at_ref"],
+        "outage_min_window_sat": s["outage_min_window_sat"],
+        "icc_vs_mec_worst_retained": s["icc_vs_mec_worst_retained"],
+        "sweep_wall_clock_s": result.wall_clock_s,
     }
-    sat_at_ref: Dict[str, float] = {}
-    min_win: Dict[str, Optional[float]] = {}
-    for arm in result.arms:
-        c = arm.curve
-        out["arms"][arm.name] = {
-            "satisfaction": [round(s, 4) for s in c.satisfaction],
-            "capacity": c.capacity,
-            "saturated": c.saturated,
-        }
-        point = next(p for p in arm.points if p.rate == ref)
-        sat_at_ref[arm.name] = point.mean.satisfaction
-        min_win[arm.name] = _outage_min_sat(
-            point.mean.windows, t_fail, t_recover
-        )
-        mark = ">=" if c.saturated else "  "
-        print(f"[resilience] {arm.name:15s} capacity{mark}{c.capacity:6.1f} "
-              f"jobs/s  sat@{ref:.0f}={sat_at_ref[arm.name]:.3f}  "
-              f"outage-min={min_win[arm.name]}")
-
-    # survivability: fraction of baseline satisfaction retained under each
-    # fault, per stance, at the reference rate
-    retained: Dict[str, Dict[str, float]] = {}
-    for stance in RESILIENCE_ARMS:
-        base = max(sat_at_ref[f"{stance}/baseline"], 1e-9)
-        retained[stance] = {
-            case: round(sat_at_ref[f"{stance}/{case}"] / base, 4)
-            for case in RESILIENCE_FAULT_CASES if case != "baseline"
-        }
-    out["retained_at_ref"] = retained
-    out["sat_at_ref"] = {k: round(v, 4) for k, v in sat_at_ref.items()}
-    out["outage_min_window_sat"] = {
-        k: (round(v, 4) if v is not None else None)
-        for k, v in min_win.items()
-    }
-    # the one-number claim: ICC's worst-case retained satisfaction minus
-    # the centralized baseline's, across the injected faults
-    icc_worst = min(retained["icc"].values())
-    mec_worst = min(retained["mec"].values())
-    out["icc_vs_mec_worst_retained"] = round(icc_worst - mec_worst, 4)
-    out["sweep_wall_clock_s"] = result.wall_clock_s
+    for name_, a in s["arms"].items():
+        mark = ">=" if a["saturated"] else "  "
+        print(f"[resilience] {name_:15s} capacity{mark}{a['capacity']:6.1f} "
+              f"jobs/s  sat@{ref:.0f}={s['sat_at_ref_raw'][name_]:.3f}  "
+              f"outage-min={s['outage_min_window_sat'][name_]}")
 
     os.makedirs(out_dir, exist_ok=True)
     with open(os.path.join(out_dir, results_name), "w") as f:
         json.dump(out, f, indent=1)
-    headline = {
-        "capacity_per_arm": {
-            a: out["arms"][a]["capacity"] for a in out["arms"]
-        },
-        "saturated": {a: out["arms"][a]["saturated"] for a in out["arms"]},
-        "sat_at_ref": out["sat_at_ref"],
-        "retained_at_ref": retained,
-        "outage_min_window_sat": out["outage_min_window_sat"],
-        "icc_vs_mec_worst_retained": out["icc_vs_mec_worst_retained"],
-        "ref_rate": ref,
-        "outage": [t_fail, t_recover],
-        "rates": grid,
-        "sim_time": sim_time,
-        "n_seeds": n_seeds,
-        "sweep_wall_clock_s": out["sweep_wall_clock_s"],
-    }
-    baseline = {
-        "schema_version": SCHEMA_VERSION,
-        "experiment": spec.name,
-        "headline": headline,
-        "result": result.to_dict(points="none"),
-    }
     with open(bench_path, "w") as f:
-        json.dump(baseline, f, indent=1, sort_keys=True)
+        json.dump(bench_doc(result, ref_rate=ref_rate), f,
+                  indent=1, sort_keys=True)
+    icc_worst = min(s["retained_at_ref"]["icc"].values())
+    mec_worst = min(s["retained_at_ref"]["mec"].values())
     print(f"[resilience] icc worst-case retains {icc_worst:.1%} vs "
           f"mec {mec_worst:.1%} (delta {out['icc_vs_mec_worst_retained']:+.1%})"
           f"  (sweep {out['sweep_wall_clock_s']:.0f}s)")

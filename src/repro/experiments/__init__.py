@@ -14,15 +14,39 @@ tree) executed by `run()` into an `ExperimentResult` (per-point
                process pool, dispatching per arm to the single-cell or
                multi-cell engine
   result.py    the unified result schema + stable JSON emission
-  validate.py  schema checks for the tracked BENCH_*.json baselines
+  cache.py     content-addressed result cache: (spec hash, arm
+               fingerprint, rate, seed) -> stored point, invalidated on
+               schema or engine-code change
+  dispatch.py  run_sharded(spec): cache lookup, cost-balanced shard
+               packing, pluggable executor, merge bit-identical to run()
+  suites.py    named experiment groups + the bench_doc writers that
+               regenerate every tracked BENCH_*.json in one command
+  validate.py  schema checks for the tracked BENCH_*.json baselines +
+               suite-coverage check
 
 CLI:  python -m repro.experiments list
       python -m repro.experiments show <name>
       python -m repro.experiments run <name> [--workers N] [--quick]
                                              [--out f.json] [--points ...]
-      python -m repro.experiments validate-bench [files...]
+                                             [--cache DIR] [--shards N]
+      python -m repro.experiments suite run <name> [--cache DIR]
+      python -m repro.experiments validate-bench [files...] [--suite]
 """
 
+from .cache import (
+    CacheStats,
+    ResultCache,
+    arm_fingerprint,
+    code_fingerprint,
+    spec_hash,
+)
+from .dispatch import (
+    CostModel,
+    LocalExecutor,
+    Shard,
+    plan_shards,
+    run_sharded,
+)
 from .registry import (
     batching_capacity_spec,
     control_capacity_spec,
@@ -40,7 +64,7 @@ from .result import (
     PointResult,
     PointRun,
 )
-from .runner import run
+from .runner import assemble_result, run
 from .spec import (
     MODEL_PROFILES,
     SCHEMA_VERSION,
@@ -52,7 +76,15 @@ from .spec import (
     VariantSpec,
     WorkloadSpec,
 )
-from .validate import validate_bench
+from .suites import (
+    Suite,
+    SuiteEntry,
+    get_suite,
+    list_suites,
+    register_suite,
+    run_suite,
+)
+from .validate import validate_bench, validate_suite_coverage
 
 __all__ = [
     "SCHEMA_VERSION",
@@ -70,6 +102,7 @@ __all__ = [
     "PointResult",
     "PointRun",
     "run",
+    "assemble_result",
     "register_experiment",
     "get_experiment",
     "list_experiments",
@@ -78,5 +111,22 @@ __all__ = [
     "batching_capacity_spec",
     "control_capacity_spec",
     "resilience_spec",
+    "CacheStats",
+    "ResultCache",
+    "spec_hash",
+    "arm_fingerprint",
+    "code_fingerprint",
+    "CostModel",
+    "LocalExecutor",
+    "Shard",
+    "plan_shards",
+    "run_sharded",
+    "Suite",
+    "SuiteEntry",
+    "register_suite",
+    "get_suite",
+    "list_suites",
+    "run_suite",
     "validate_bench",
+    "validate_suite_coverage",
 ]

@@ -7,14 +7,27 @@
     python -m repro.experiments run network_capacity --quick
     python -m repro.experiments run network_capacity --quick \
         --profile --progress --runlog benchmarks/results/runlog.jsonl
+    python -m repro.experiments run network_capacity_quick \
+        --cache /tmp/repro-cache --shards 4
     python -m repro.experiments report BENCH_network.json --format md
     python -m repro.experiments report run.json --runlog runlog.jsonl
-    python -m repro.experiments validate-bench
+    python -m repro.experiments suite list
+    python -m repro.experiments suite run bench_quick \
+        --cache /tmp/repro-cache --shards 2
+    python -m repro.experiments validate-bench --suite
 
 ``run --quick`` resolves the registered ``<name>_quick`` variant — the
 same reduced grids CI drives — and, like every reduced output, should be
 pointed at ``benchmarks/results/`` (never the tracked repo-root
 baselines, which only the full benchmark scripts regenerate).
+
+``run --cache/--shards`` and the ``suite`` subcommand go through the
+sharded dispatcher (`repro.experiments.dispatch.run_sharded`): points
+already in the content-addressed result cache are replayed instead of
+re-simulated, the rest are packed into cost-balanced shards, and the
+merged result is bit-identical to the single-process runner. ``suite
+run`` regenerates every tracked file a suite names — from the repo root,
+so the ``benchmarks`` formatters import.
 """
 
 from __future__ import annotations
@@ -103,6 +116,19 @@ def main(argv=None) -> int:
                        help="worker heartbeat interval for --progress/"
                             "--runlog (default 5; heartbeating points "
                             "are never killed by the task timeout)")
+    p_run.add_argument("--cache", default=None, metavar="DIR",
+                       help="content-addressed result cache: replay "
+                            "already-computed (arm, rate, seed) points "
+                            "from DIR and store the rest (routes the run "
+                            "through the sharded dispatcher)")
+    p_run.add_argument("--shards", type=int, default=None, metavar="N",
+                       help="pack uncached points into N cost-balanced "
+                            "shards (default: one per worker; implies the "
+                            "sharded dispatcher)")
+    p_run.add_argument("--cost-log", default=None, metavar="PATH",
+                       help="runlog JSONL from a prior run: mine per-point "
+                            "durations to balance the shard packing "
+                            "(default: --runlog's file when it exists)")
 
     p_rep = sub.add_parser(
         "report",
@@ -121,12 +147,51 @@ def main(argv=None) -> int:
                        help="runlog JSONL from `run --runlog`: adds a "
                             "per-point duration/RSS table to the report")
 
+    p_suite = sub.add_parser(
+        "suite",
+        help="run/list benchmark suites (named groups of experiments "
+             "that regenerate the tracked BENCH_*.json files)",
+    )
+    suite_sub = p_suite.add_subparsers(dest="suite_cmd", required=True)
+    suite_sub.add_parser("list", help="registered suites + their entries")
+    p_sr = suite_sub.add_parser(
+        "run",
+        help="run every experiment of a suite through the sharded "
+             "dispatcher and rewrite its tracked result files",
+    )
+    p_sr.add_argument("name")
+    p_sr.add_argument("--cache", default=None, metavar="DIR",
+                      help="shared content-addressed result cache "
+                           "directory (warm reruns replay points instead "
+                           "of re-simulating)")
+    p_sr.add_argument("--shards", type=int, default=None, metavar="N",
+                      help="shards per experiment (default: one per "
+                           "worker)")
+    p_sr.add_argument("--workers", type=int, default=None,
+                      help="process pool size (-1 = one per CPU; default: "
+                           "each spec's own setting)")
+    p_sr.add_argument("--root", default=".",
+                      help="rebase the suite's repo-root-relative output "
+                           "paths (default: cwd)")
+    p_sr.add_argument("--runlog", default=None, metavar="PATH",
+                      help="append lifecycle + cache_stats events here")
+    p_sr.add_argument("--progress", action="store_true",
+                      help="live sweep status on stderr (TTY only)")
+    p_sr.add_argument("--stats", default=None, metavar="PATH",
+                      help="write the suite summary (per-entry cache "
+                           "deltas + totals) as JSON here")
+
     p_val = sub.add_parser(
         "validate-bench",
         help="check tracked BENCH_*.json baselines against the result schema",
     )
     p_val.add_argument("paths", nargs="*",
                        help="explicit files (default: the tracked baselines)")
+    p_val.add_argument("--suite", action="store_true",
+                       help="also check the suite catalog: bench_all "
+                            "covers every tracked baseline, experiments "
+                            "are registered, writers resolve (needs the "
+                            "repo root on sys.path)")
 
     args = ap.parse_args(argv)
     _configure_logging(args)
@@ -145,6 +210,30 @@ def main(argv=None) -> int:
     if args.cmd == "run":
         name = f"{args.name}_quick" if args.quick else args.name
         spec = get_experiment(name)
+        sharded = (args.cache is not None or args.shards is not None
+                   or args.cost_log is not None)
+        if sharded and (args.trace or args.profile):
+            # cached points carry no telemetry/profile (the cache refuses
+            # them), so a replayed run could not honor these flags
+            print("error: --cache/--shards/--cost-log cannot be combined "
+                  "with --trace or --profile (cached points carry no "
+                  "telemetry); drop one side", file=sys.stderr)
+            return 2
+        if sharded:
+            from .dispatch import run_sharded
+
+            result = run_sharded(spec, shards=args.shards,
+                                 cache=args.cache, workers=args.workers,
+                                 cost_log=args.cost_log,
+                                 runlog=args.runlog,
+                                 progress=args.progress or None,
+                                 heartbeat_s=args.heartbeat)
+            print(result.summary())
+            if args.out:
+                with open(args.out, "w") as f:
+                    f.write(result.to_json(points=args.points))
+                print(f"wrote {args.out}")
+            return 0
         if args.trace_arm is not None:
             # fail fast, before any simulation runs: a typo'd arm name
             # used to surface only after the whole sweep finished
@@ -207,14 +296,58 @@ def main(argv=None) -> int:
             print(text, end="")
         return 0
 
+    if args.cmd == "suite":
+        from .suites import get_suite, list_suites, run_suite
+
+        if args.suite_cmd == "list":
+            for name in list_suites():
+                suite = get_suite(name)
+                print(f"{name}: {suite.description}")
+                for e in suite.entries:
+                    print(f"  {e.experiment:28s} -> {e.bench_path}")
+            return 0
+        # suite run
+        summary = run_suite(args.name, cache=args.cache,
+                            shards=args.shards, workers=args.workers,
+                            root=args.root, runlog=args.runlog,
+                            progress=args.progress or None)
+        for row in summary["entries"]:
+            cache_s = ""
+            if row["cache"] is not None:
+                c = row["cache"]
+                cache_s = (f"  cache {c['hits']} hit / {c['misses']} miss"
+                           f" / {c['stale']} stale")
+            print(f"[suite] {row['experiment']:28s} -> {row['bench_path']}"
+                  f"  ({row['n_points']} points, "
+                  f"{row['task_seconds']:.1f} task-s){cache_s}")
+        if summary["cache"] is not None:
+            t = summary["cache"]
+            n = t["hits"] + t["misses"] + t["stale"]
+            pct = 100.0 * t["hits"] / n if n else 0.0
+            print(f"[suite] cache totals: {t['hits']}/{n} point hits "
+                  f"({pct:.0f}%), {t['writes']} writes")
+        if args.stats:
+            import json as _json
+
+            doc = {k: summary[k] for k in ("suite", "entries", "cache")}
+            with open(args.stats, "w") as f:
+                _json.dump(doc, f, indent=1, sort_keys=True)
+            print(f"wrote {args.stats}")
+        return 0
+
     if args.cmd == "validate-bench":
         problems = validate_bench(args.paths or None)
+        if args.suite:
+            from .validate import validate_suite_coverage
+
+            problems = problems + validate_suite_coverage()
         if problems:
             for p in problems:
                 print(f"[validate-bench] {p}")
             return 1
+        suffix = " and the suite catalog covers them" if args.suite else ""
         print("[validate-bench] all tracked baselines parse against the "
-              "ExperimentResult schema")
+              f"ExperimentResult schema{suffix}")
         return 0
 
     return 2  # unreachable: subparsers are required

@@ -54,6 +54,11 @@ class PointRun:
     # CLOCK_MONOTONIC is system-wide on Linux, so worker stamps compare
     t_start_mono: float = 0.0
     t_end_mono: float = 0.0
+    # runtime-only (NOT serialized): this run replayed the point from a
+    # `repro.experiments.cache.ResultCache` instead of simulating it —
+    # kept out of the serialized form so warm and cold runs of the same
+    # spec emit byte-identical result files
+    cached: bool = False
 
 
 @dataclasses.dataclass
@@ -101,6 +106,12 @@ class ExperimentResult:
     arms: List[ArmResult]
     wall_clock_s: float
     schema_version: int = SCHEMA_VERSION
+    # runtime-only (NOT serialized): per-run cache accounting attached by
+    # the sharded dispatcher — {"hits", "misses", "stale", "writes"}.
+    # Deliberately outside to_dict: a warm rerun must reproduce a cold
+    # run's result files byte-identically, and hit counts differ by
+    # definition. The runlog and the suite cache-stats artifact carry it.
+    cache: Optional[Dict[str, int]] = None
 
     def arm(self, name: str) -> ArmResult:
         for a in self.arms:
@@ -216,6 +227,30 @@ class ExperimentResult:
     def to_json(self, points: str = "full") -> str:
         return json.dumps(self.to_dict(points=points), indent=1, sort_keys=True)
 
+    def to_canonical_dict(self, points: str = "full") -> dict:
+        """The *physics* of the result with every timing/monitoring field
+        normalized out: wall-clocks zeroed, elapsed/profile/duration/RSS
+        keys dropped. Two runs of the same spec — serial vs pooled,
+        single-process vs sharded, cold vs warm cache — must agree on
+        this form exactly; it is what the shard-merge bit-identity tests
+        and the CI cache gate compare."""
+        d = self.to_dict(points=points)
+        d["wall_clock_s"] = 0.0
+        for a in d["arms"]:
+            a["wall_clock_s"] = 0.0
+            a.pop("elapsed_s", None)
+            a.pop("profile", None)
+            for p in a["points"]:
+                for s in p.get("seeds", []):
+                    s["duration_s"] = 0.0
+                    s.pop("peak_rss_mb", None)
+        return d
+
+    def to_canonical_json(self, points: str = "full") -> str:
+        return json.dumps(
+            self.to_canonical_dict(points=points), indent=1, sort_keys=True
+        )
+
     def drop_reason_totals(self) -> Dict[str, Dict[str, int]]:
         """Per-arm loss attribution summed over every stored point mean
         (empty dicts when the result predates reason codes or stores no
@@ -255,6 +290,13 @@ class ExperimentResult:
                 f"  slowest arm: {slowest.name} "
                 f"({slowest.wall_clock_s:.1f}s of {total:.1f}s summed "
                 f"task-seconds{elapsed})"
+            )
+        if self.cache is not None:
+            c = self.cache
+            lines.append(
+                f"  cache: {c.get('hits', 0)} hits, "
+                f"{c.get('misses', 0)} misses, {c.get('stale', 0)} stale, "
+                f"{c.get('writes', 0)} writes"
             )
         return "\n".join(lines)
 

@@ -59,7 +59,7 @@ from .spec import (
     resolve_topology,
 )
 
-__all__ = ["run", "run_point"]
+__all__ = ["run", "run_point", "assemble_result"]
 
 
 def _single_cell_point(
@@ -329,10 +329,33 @@ def run(
     wall = time.perf_counter() - t0
     if prog is not None:
         prog.finish()
-    # resilient sweeps (SweepSpec.task_timeout_s): a point that timed out
-    # or kept raising comes back as a TaskError — keep it as a structured
-    # error on its PointRun so the sweep reports every point it *could*
-    # compute instead of aborting the grid
+    result = assemble_result(spec, arms, flat, round(wall, 2))
+    if rl is not None:
+        _log_run_summary(rl, result)
+        if own_runlog:
+            rl.close()
+    return result
+
+
+def assemble_result(
+    spec: ExperimentSpec,
+    arms: List[ResolvedArm],
+    flat: List,
+    wall_clock_s: float,
+) -> ExperimentResult:
+    """Regroup a flat, task-ordered list of per-point outcomes into the
+    unified `ExperimentResult`: the one aggregation path both `run` and
+    the sharded dispatcher (`repro.experiments.dispatch.run_sharded`) go
+    through, so a merged sharded result is structurally identical to a
+    single-process one by construction.
+
+    `flat` holds one entry per (arm, rate, seed) task in the exact order
+    `run` flattens them (arm-major, then rate, then seed): `PointRun`s,
+    or raw `core.parallel.TaskError`s — a point that timed out or kept
+    raising (resilient sweeps) becomes a structured ``error`` on its
+    `PointRun` so the sweep reports every point it *could* compute
+    instead of aborting the grid.
+    """
     flat = [
         PointRun(result=None, error={
             "error": p.error, "message": p.message, "attempts": p.attempts,
@@ -386,17 +409,12 @@ def run(
             profile=merge_profiles(profiles),
         ))
     assert cursor == len(flat)
-    result = ExperimentResult(
+    return ExperimentResult(
         experiment=spec.name,
         spec=spec,
         arms=out,
-        wall_clock_s=round(wall, 2),
+        wall_clock_s=wall_clock_s,
     )
-    if rl is not None:
-        _log_run_summary(rl, result)
-        if own_runlog:
-            rl.close()
-    return result
 
 
 def _log_run_summary(rl, result: ExperimentResult) -> None:
@@ -417,6 +435,7 @@ def _log_run_summary(rl, result: ExperimentResult) -> None:
                     "point", arm=a.name, rate=p.rate, seed=k,
                     duration_s=srun.duration_s,
                     peak_rss_mb=srun.peak_rss_mb,
+                    cached=srun.cached or None,
                     error=(srun.error or {}).get("error"),
                     profile=(
                         {

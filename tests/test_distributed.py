@@ -1,0 +1,403 @@
+"""Tests for the distributed-execution subsystem (cache/dispatch/suites).
+
+Covers: the pinned spec-hash golden (stable across dict ordering and
+process restarts, sensitive to every spec field and to SCHEMA_VERSION),
+arm-fingerprint inclusion/exclusion semantics, cache round-trips and
+staleness on schema/engine-code change, deterministic cost-balanced
+shard packing, and — most importantly — that a sharded + cached run
+merges bit-identically to the single-process runner, cold and warm.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+import pytest
+
+from repro.experiments import (
+    CostModel,
+    ExperimentSpec,
+    ResultCache,
+    Suite,
+    SuiteEntry,
+    arm_fingerprint,
+    get_experiment,
+    get_suite,
+    list_suites,
+    plan_shards,
+    register_suite,
+    run,
+    run_sharded,
+    run_suite,
+    spec_hash,
+    validate_suite_coverage,
+)
+from repro.experiments import cache as cache_mod
+from repro.experiments.__main__ import main
+from repro.experiments.runner import run_point
+
+GOLDEN_PATH = os.path.join(
+    os.path.dirname(__file__), "data", "spec_hash_golden.json"
+)
+
+
+def _quick_spec() -> ExperimentSpec:
+    return get_experiment("network_capacity_quick")
+
+
+# ------------------------------------------------------------ spec hashing
+class TestSpecHash:
+    def test_golden_pin(self):
+        """The canonical hash of the registered network_capacity spec is
+        pinned: it must be stable across process restarts and change
+        only when the spec (or its schema) deliberately changes — then
+        regenerate tests/data/spec_hash_golden.json in the same commit."""
+        with open(GOLDEN_PATH) as f:
+            golden = json.load(f)
+        spec = get_experiment(golden["experiment"])
+        assert spec_hash(spec) == golden["spec_hash"], (
+            "spec_hash(network_capacity) drifted from the golden pin — "
+            "either the spec or SCHEMA_VERSION changed (regenerate the "
+            "fixture deliberately) or hashing lost canonicality (a bug)"
+        )
+        fps = {a.name: arm_fingerprint(a) for a in spec.resolve_arms()}
+        assert fps == golden["arm_fingerprints"]
+
+    def test_dict_order_independent(self):
+        spec = _quick_spec()
+        # a deep key-order scramble must not move the hash: the codec
+        # reparses and re-emits canonically
+        scrambled = spec.to_dict()
+
+        def reorder(obj):
+            if isinstance(obj, dict):
+                return {k: reorder(obj[k]) for k in reversed(list(obj))}
+            if isinstance(obj, list):
+                return [reorder(v) for v in obj]
+            return obj
+
+        reparsed = ExperimentSpec.from_dict(reorder(scrambled))
+        assert spec_hash(reparsed) == spec_hash(spec)
+
+    def test_sensitive_to_any_field(self):
+        spec = _quick_spec()
+        h0 = spec_hash(spec)
+        assert spec_hash(
+            dataclasses.replace(
+                spec, sweep=dataclasses.replace(spec.sweep, sim_time=4.5)
+            )
+        ) != h0
+        assert spec_hash(dataclasses.replace(spec, name="renamed")) != h0
+        assert spec_hash(
+            dataclasses.replace(spec, description="edited")
+        ) != h0
+
+    def test_schema_version_bump_changes_every_hash(self, monkeypatch):
+        spec = _quick_spec()
+        arm = spec.resolve_arms()[0]
+        h_spec, h_arm = spec_hash(spec), arm_fingerprint(arm)
+        import repro.experiments.spec as spec_mod
+
+        monkeypatch.setattr(spec_mod, "SCHEMA_VERSION", 99)
+        monkeypatch.setattr(
+            spec_mod, "_COMPAT_VERSIONS",
+            spec_mod._COMPAT_VERSIONS + (99,),
+        )
+        monkeypatch.setattr(cache_mod, "SCHEMA_VERSION", 99)
+        assert spec_hash(spec) != h_spec
+        assert arm_fingerprint(arm) != h_arm
+
+
+class TestArmFingerprint:
+    def test_excludes_name_and_grid_shape(self):
+        """Identical physics under a different arm name, rate grid, seed
+        count, alpha, or worker count shares cache entries."""
+        spec = _quick_spec()
+        arm = spec.resolve_arms()[0]
+        fp = arm_fingerprint(arm)
+        assert arm_fingerprint(
+            dataclasses.replace(arm, name="renamed")
+        ) == fp
+        sweep = dataclasses.replace(
+            arm.sweep, rates=(1.0, 2.0), n_seeds=7, alpha=0.5, workers=4
+        )
+        assert arm_fingerprint(
+            dataclasses.replace(arm, sweep=sweep)
+        ) == fp
+
+    def test_includes_physics_fields(self):
+        spec = _quick_spec()
+        arm = spec.resolve_arms()[0]
+        fp = arm_fingerprint(arm)
+        for field, value in (
+            ("sim_time", 99.0), ("warmup", 0.25),
+            ("base_seed", 123), ("fast", not arm.sweep.fast),
+        ):
+            sweep = dataclasses.replace(arm.sweep, **{field: value})
+            assert arm_fingerprint(
+                dataclasses.replace(arm, sweep=sweep)
+            ) != fp, field
+        assert arm_fingerprint(
+            dataclasses.replace(
+                arm,
+                workload=dataclasses.replace(
+                    arm.workload, scenario="chatbot"
+                ),
+            )
+        ) != fp
+
+
+# ------------------------------------------------------------ result cache
+class TestResultCache:
+    def test_roundtrip_and_stats(self, tmp_path):
+        spec = _quick_spec()
+        arm = spec.resolve_arms()[0]
+        rate = float(arm.sweep.rates[0])
+        store = ResultCache(tmp_path)
+        assert store.get(arm, rate, 0) is None
+        assert store.stats.misses == 1
+
+        pr = run_point(arm, rate, 0)
+        assert store.put(arm, rate, 0, pr)
+        got = store.get(arm, rate, 0)
+        assert got is not None and got.cached
+        assert got.result == pr.result
+        assert got.extras == pr.extras
+        assert got.duration_s == pr.duration_s
+        assert store.stats.as_dict() == {
+            "hits": 1, "misses": 1, "stale": 0, "writes": 1,
+        }
+
+    def test_stale_on_code_fingerprint_change(self, tmp_path, monkeypatch):
+        spec = _quick_spec()
+        arm = spec.resolve_arms()[0]
+        rate = float(arm.sweep.rates[0])
+        store = ResultCache(tmp_path)
+        store.put(arm, rate, 0, run_point(arm, rate, 0))
+        monkeypatch.setattr(
+            cache_mod, "code_fingerprint", lambda: "different-engine"
+        )
+        assert store.get(arm, rate, 0) is None
+        assert store.stats.stale == 1 and store.stats.misses == 0
+
+    def test_stale_on_torn_entry(self, tmp_path):
+        spec = _quick_spec()
+        arm = spec.resolve_arms()[0]
+        rate = float(arm.sweep.rates[0])
+        store = ResultCache(tmp_path)
+        store.put(arm, rate, 0, run_point(arm, rate, 0))
+        with open(store.entry_path(arm, rate, 0), "w") as f:
+            f.write('{"meta": {"cache_schema"')  # torn mid-write
+        assert store.get(arm, rate, 0) is None
+        assert store.stats.stale == 1
+
+    def test_never_caches_errors_or_telemetry(self, tmp_path):
+        from repro.experiments.result import PointRun
+
+        spec = _quick_spec()
+        arm = spec.resolve_arms()[0]
+        store = ResultCache(tmp_path)
+        errored = PointRun(result=None, error={"error": "boom"})
+        assert not store.put(arm, 1.0, 0, errored)
+        pr = run_point(arm, float(arm.sweep.rates[0]), 0)
+        pr.result.telemetry = {"counts": {}}
+        assert not store.put(arm, 1.0, 0, pr)
+        assert store.stats.writes == 0
+
+
+# ------------------------------------------------------- shard scheduling
+class TestPlanShards:
+    POINTS = [
+        (0, "a", 1.0, 0), (1, "a", 2.0, 0),
+        (2, "b", 1.0, 0), (3, "b", 2.0, 0), (4, "b", 2.0, 1),
+    ]
+
+    def test_deterministic_and_complete(self):
+        p1 = plan_shards(self.POINTS, 3)
+        p2 = plan_shards(self.POINTS, 3)
+        assert p1 == p2
+        covered = sorted(t for s in p1 for t in s.task_ids)
+        assert covered == [0, 1, 2, 3, 4]
+        for s in p1:  # task order within each shard
+            assert list(s.task_ids) == sorted(s.task_ids)
+
+    def test_cost_balancing(self):
+        cost = CostModel()
+        for _ in range(3):
+            cost.observe("a", 1.0, 10.0)
+            cost.observe("b", 1.0, 1.0)
+        points = [(i, "b", 1.0, i) for i in range(4)] + [(4, "a", 1.0, 0)]
+        shards = plan_shards(points, 2, cost)
+        # the one expensive point gets a shard to itself; the cheap four
+        # pile into the other
+        sizes = sorted(len(s.points) for s in shards)
+        assert sizes == [1, 4]
+        lone = next(s for s in shards if len(s.points) == 1)
+        assert lone.points[0][0] == "a"
+
+    def test_clamps_to_point_count(self):
+        shards = plan_shards(self.POINTS[:2], 8)
+        assert len(shards) == 2
+        assert all(len(s.points) == 1 for s in shards)
+
+    def test_cost_model_tiers(self):
+        cost = CostModel(default_s=2.5)
+        assert cost.predict("a", 1.0) == 2.5  # no data: default
+        cost.observe("a", 1.0, 4.0)
+        cost.observe("a", 2.0, 8.0)
+        assert cost.predict("a", 1.0) == 4.0   # exact (arm, rate)
+        assert cost.predict("a", 3.0) == 6.0   # arm mean
+        assert cost.predict("z", 1.0) == 6.0   # global mean
+
+    def test_cost_model_from_runlog(self, tmp_path):
+        log = tmp_path / "runlog.jsonl"
+        rows = [
+            {"event": "run_start", "experiment": "x"},
+            {"event": "point", "arm": "a", "rate": 1.0,
+             "duration_s": 3.0},
+            {"event": "point", "arm": "a", "rate": 1.0,
+             "duration_s": 5.0},
+            {"event": "point", "arm": "b", "rate": 1.0,
+             "duration_s": 1.0, "error": "boom"},  # skipped
+        ]
+        log.write_text("\n".join(json.dumps(r) for r in rows) + "\n")
+        cost = CostModel.from_runlog(str(log))
+        assert cost.predict("a", 1.0) == 4.0
+        assert cost.predict("b", 1.0) == 4.0  # error row never observed
+        # a missing file is an empty model, not a crash
+        assert CostModel.from_runlog(str(tmp_path / "absent.jsonl"))
+
+
+# ------------------------------------------- sharded-merge bit-identity
+class TestShardedBitIdentity:
+    @pytest.fixture(scope="class")
+    def single(self):
+        return run(_quick_spec(), workers=0)
+
+    def test_cold_warm_and_invalidation(self, single, tmp_path):
+        """The tentpole contract, end to end: a sharded + cached run is
+        canonically identical to the single-process runner; the warm
+        rerun replays every point and serializes byte-identically to
+        the cold run (durations included); replacing the physics of a
+        subset of arms invalidates exactly those entries."""
+        spec = _quick_spec()
+        cold = run_sharded(spec, shards=2, cache=str(tmp_path), workers=0)
+        n = sum(
+            len(a.sweep.rates) * a.sweep.n_seeds
+            for a in spec.resolve_arms()
+        )
+        assert cold.cache == {
+            "hits": 0, "misses": n, "stale": 0, "writes": n,
+        }
+        # timing-normalized form matches the single-process runner
+        assert (cold.to_canonical_json()
+                == single.to_canonical_json())
+
+        warm = run_sharded(spec, shards=2, cache=str(tmp_path), workers=0)
+        assert warm.cache == {
+            "hits": n, "misses": 0, "stale": 0, "writes": 0,
+        }
+        # the warm rerun replays durations too: full byte identity
+        assert warm.to_json() == cold.to_json()
+
+        # partial invalidation: change one arm's physics, keep the rest
+        variants = tuple(
+            (dataclasses.replace(v, sim_time=3.0)
+             if v.name == spec.variants[0].name else v)
+            for v in spec.variants
+        )
+        changed = dataclasses.replace(spec, variants=variants)
+        per_arm = n // len(spec.variants)
+        mixed = run_sharded(
+            changed, shards=2, cache=str(tmp_path), workers=0
+        )
+        assert mixed.cache == {
+            "hits": n - per_arm, "misses": per_arm, "stale": 0,
+            "writes": per_arm,
+        }
+
+    def test_shard_count_invariance(self, single):
+        for shards in (1, 3):
+            res = run_sharded(_quick_spec(), shards=shards, workers=0)
+            assert (res.to_canonical_json()
+                    == single.to_canonical_json()), shards
+
+    def test_parallel_workers_match_serial(self, single):
+        res = run_sharded(_quick_spec(), shards=2, workers=2)
+        assert res.to_canonical_json() == single.to_canonical_json()
+
+
+# ------------------------------------------------------------------ suites
+class TestSuites:
+    def test_catalog_covers_tracked_baselines(self):
+        assert validate_suite_coverage() == []
+        assert {"bench_all", "bench_quick"} <= set(list_suites())
+
+    def test_register_guards(self):
+        entry = SuiteEntry("network_capacity_quick", "out.json",
+                           "benchmarks.network_capacity:bench_doc")
+        with pytest.raises(ValueError, match="already registered"):
+            register_suite(Suite("bench_all", "dup", (entry,)))
+        with pytest.raises(ValueError, match="no entries"):
+            register_suite(Suite("empty", "none", ()))
+        with pytest.raises(ValueError, match="twice"):
+            register_suite(Suite("dup-path", "x", (entry, entry)))
+        with pytest.raises(KeyError, match="unknown suite"):
+            get_suite("never-registered")
+
+    def test_run_suite_and_cli(self, tmp_path, capsys):
+        """A one-entry suite regenerates its file through the sharded
+        dispatcher; the second (warm) run through the CLI reproduces it
+        byte-identically off the cache."""
+        register_suite(Suite(
+            name="tiny-test-suite",
+            description="one quick network entry (test only)",
+            entries=(SuiteEntry(
+                "network_capacity_quick", "BENCH_tiny.json",
+                "benchmarks.network_capacity:bench_doc",
+            ),),
+        ), replace=True)
+        cache_dir = tmp_path / "cache"
+        out = run_suite("tiny-test-suite", cache=str(cache_dir),
+                        shards=2, workers=0, root=str(tmp_path))
+        bench = tmp_path / "BENCH_tiny.json"
+        assert bench.exists()
+        first = bench.read_bytes()
+        doc = json.loads(first)
+        assert doc["experiment"] == "network_capacity_quick"
+        assert out["cache"]["misses"] > 0 and out["cache"]["hits"] == 0
+
+        stats_path = tmp_path / "stats.json"
+        rc = main([
+            "suite", "run", "tiny-test-suite",
+            "--cache", str(cache_dir), "--shards", "2", "--workers", "0",
+            "--root", str(tmp_path), "--stats", str(stats_path),
+        ])
+        assert rc == 0
+        assert bench.read_bytes() == first  # warm rerun: byte-identical
+        stats = json.loads(stats_path.read_text())
+        assert stats["cache"]["misses"] == 0
+        assert stats["cache"]["hits"] == out["cache"]["misses"]
+        capsys.readouterr()
+
+    def test_cli_run_with_cache(self, tmp_path, capsys):
+        rc = main([
+            "run", "network_capacity_quick",
+            "--cache", str(tmp_path / "c"), "--shards", "2",
+            "--workers", "0",
+            "--out", str(tmp_path / "r.json"), "--points", "none",
+        ])
+        assert rc == 0
+        assert (tmp_path / "r.json").exists()
+        out = capsys.readouterr().out
+        assert "cache:" in out  # summary() surfaces the hit accounting
+
+    def test_cli_rejects_cache_with_trace(self, tmp_path, capsys):
+        rc = main([
+            "run", "network_capacity_quick",
+            "--cache", str(tmp_path), "--trace", str(tmp_path / "t.json"),
+        ])
+        assert rc == 2
+        assert "cannot be combined" in capsys.readouterr().err
